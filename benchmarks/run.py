@@ -1,0 +1,55 @@
+"""Benchmark driver: one bench per paper table/figure + the roofline
+aggregation.  `python -m benchmarks.run [--quick] [--only NAME]`."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = [
+    ("methods", "benchmarks.bench_methods",
+     "paper Fig. 7/8 — four methods, kernel time"),
+    ("tiles", "benchmarks.bench_tiles",
+     "paper Fig. 9/10 — tile/block configuration sweep"),
+    ("pipeline", "benchmarks.bench_pipeline",
+     "paper Fig. 13/15 — dual-buffering frame rate"),
+    ("multidevice", "benchmarks.bench_multidevice",
+     "paper Fig. 16/17 — multi-device bin/spatial sharding"),
+    ("speedup", "benchmarks.bench_speedup",
+     "paper Fig. 19/20 — speedup vs sequential CPU"),
+    ("roofline", "benchmarks.bench_roofline",
+     "assignment §Roofline — dry-run derived terms"),
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes/iterations")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    failures = []
+    for name, module, desc in BENCHES:
+        if only and name not in only:
+            continue
+        print(f"\n{'='*72}\n[{name}] {desc}\n{'='*72}")
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(module, fromlist=["run"])
+            print(mod.run(quick=args.quick))
+            print(f"-- {name} done in {time.perf_counter()-t0:.1f}s")
+        except Exception as e:  # keep the suite going
+            failures.append(name)
+            print(f"-- {name} FAILED: {type(e).__name__}: {e}")
+    if failures:
+        print(f"\nFAILED benches: {failures}")
+        sys.exit(1)
+    print("\nall benches complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Serving example: batched prefill + greedy decode over the family API.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen2-1.5b
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-130m --gen 32
+
+Uses the reduced (smoke) configs so it runs on CPU; the identical code
+path is what launch/dryrun.py lowers for the full configs at 256/512
+chips (prefill_32k / decode_32k / long_500k cells).
+"""
+
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    argv = sys.argv[1:]
+    if "--smoke" not in argv:
+        argv.append("--smoke")
+    serve.main(argv)
+
+
+if __name__ == "__main__":
+    main()

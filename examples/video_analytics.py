@@ -1,0 +1,71 @@
+"""End-to-end real-time video analytics driver (the paper's use case).
+
+Pipeline per frame (all on-accelerator once the frame is staged):
+  1. WF-TiS integral histogram (double-buffered across frames, paper §4.4)
+  2. fragments-based tracker update (paper ref. [13]) — O(1) histogram
+     queries for every candidate window
+  3. likelihood map for the tracked target (abstract: "feature likelihood
+     maps ... play a critical role")
+
+    PYTHONPATH=src python examples/video_analytics.py [--frames 40]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distances
+from repro.core.pipeline import DoubleBufferedExecutor
+from repro.core.region_query import likelihood_map, region_histogram
+from repro.core.tracking import FragmentTracker, TrackerConfig
+from repro.data import video_frames
+from repro.kernels.ops import integral_histogram
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--frames", type=int, default=40)
+    ap.add_argument("--hw", type=int, nargs=2, default=(480, 640))
+    ap.add_argument("--bins", type=int, default=16)
+    args = ap.parse_args(argv)
+    h, w = args.hw
+
+    frames = video_frames(h, w, args.frames, seed=3)
+    print(f"{args.frames} frames of {h}x{w}, {args.bins} bins")
+
+    # --- stage 1: double-buffered integral histograms over the stream ----
+    ih_fn = jax.jit(lambda f: integral_histogram(
+        f, args.bins, method="wf_tis", backend="auto"))
+    executor = DoubleBufferedExecutor(ih_fn, depth=2)
+
+    # --- stage 2+3: tracker + likelihood map consume H ------------------
+    tracker = FragmentTracker(TrackerConfig(num_bins=args.bins,
+                                            search_radius=10))
+    state = tracker.init(jnp.asarray(frames[0]), [h // 3, w // 3,
+                                                  h // 3 + 47, w // 3 + 47])
+    target_hist = region_histogram(
+        ih_fn(jnp.asarray(frames[0])), state["bbox"])
+
+    t0 = time.perf_counter()
+    boxes = []
+    for i, H in enumerate(executor.map(frames)):
+        state = tracker.step(state, jnp.asarray(frames[i]))
+        boxes.append(np.asarray(state["bbox"]))
+        if i == args.frames - 1:
+            lmap = likelihood_map(H, target_hist, (48, 48),
+                                  distances.intersection, stride=16)
+    dt = time.perf_counter() - t0
+    jax.block_until_ready(lmap)
+
+    print(f"pipeline: {args.frames/dt:.2f} frames/sec "
+          f"({dt/args.frames*1e3:.1f} ms/frame) on {jax.devices()[0]}")
+    print(f"track: start {boxes[0][:2]} -> end {boxes[-1][:2]}")
+    print(f"likelihood map {lmap.shape}, peak={float(lmap.max()):.3f} at "
+          f"{np.unravel_index(int(jnp.argmax(lmap)), lmap.shape)}")
+
+
+if __name__ == "__main__":
+    main()

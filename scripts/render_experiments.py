@@ -1,0 +1,160 @@
+"""Render §Dry-run / §Roofline sections of EXPERIMENTS.md from
+results/dryrun/*.json (and §Perf variant tables from results/perf/).
+
+Usage: PYTHONPATH=src python scripts/render_experiments.py
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+from repro.configs import get_config  # noqa: E402
+
+
+def load(d):
+    out = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def note(r) -> str:
+    """One sentence: what would move the dominant term down."""
+    cfg = get_config(r["arch"])
+    dom, kind = r["terms"]["dominant"], r["kind"]
+    if r["arch"].startswith("mamba2"):
+        return ("model axis idle (24 heads !% 16); sequence-parallel SSD "
+                "scan spreads the chunk scan over it (Perf C)")
+    if kind == "decode" and dom == "collective":
+        return ("KV cache heads/head_dim-sharded forces per-step cache "
+                "all-gathers; seq-sharded flash-decode layout removes "
+                "them (Perf B)")
+    if kind == "train" and dom == "memory":
+        return ("remat=full re-reads every layer's weights+activations in "
+                "the bwd pass; dots policy / microbatching cut HLO bytes "
+                "and live memory (Perf A)")
+    if kind == "prefill" and dom == "collective":
+        return ("TP all-reduce of (B,S,d) activations twice per layer; "
+                "1D seq-sharding between TP regions (RS+AG) halves live "
+                "bytes and enables overlap")
+    if kind == "prefill" and dom == "memory":
+        return ("bf16 weight copies + attention intermediates; fusing "
+                "cast into the gathers and flash-block retuning")
+    if dom == "memory" and kind == "decode":
+        return "cache/state streaming bound — expected for decode"
+    return "balanced; overlap compute/comm via latency-hiding scheduler"
+
+
+def table(results, mesh):
+    hdr = ("| arch | shape | status | bound | compute ms | memory ms | "
+           "collective ms | roofline frac | 6ND/HLO | GiB/dev | "
+           "what moves the dominant term |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|")
+    rows = []
+    for r in results:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | skipped | - | - | "
+                        f"- | - | - | - | - | {r['reason'][:60]}... |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | - | - | - "
+                        f"| - | - | - | - | {r.get('error', '')[:60]} |")
+            continue
+        t = r["terms"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | {t['dominant']} "
+            f"| {t['compute_s']*1e3:.2f} | {t['memory_s']*1e3:.2f} "
+            f"| {t['collective_s']*1e3:.2f} "
+            f"| {t['roofline_fraction']:.3f} "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['memory']['per_device_total_gb']:.2f} "
+            f"| {note(r)} |")
+    return "\n".join([hdr] + rows)
+
+
+def dryrun_summary(results):
+    ok = [r for r in results if r["status"] == "ok"]
+    sk = [r for r in results if r["status"] == "skipped"]
+    er = [r for r in results if r["status"] == "error"]
+    comp = [r["compile_s"] for r in ok]
+    fits = [r for r in ok if r["mesh"] == "pod"
+            and r["memory"]["per_device_total_gb"] <= 16.0]
+    lines = [
+        f"**Result: {len(ok)} cells compiled OK, {len(sk)} skipped "
+        f"(assignment rules), {len(er)} errors** — every runnable "
+        f"(arch x shape) lowers and compiles on both meshes.",
+        "",
+        f"- compile time: median "
+        f"{sorted(comp)[len(comp)//2]:.1f}s, max {max(comp):.1f}s per cell",
+        f"- {len(fits)}/{sum(1 for r in ok if r['mesh']=='pod')} single-pod "
+        "cells fit 16 GiB/chip as-baselined; the big train cells "
+        "(kimi/scout/llama3 train_4k) exceed it with remat=full fp32-Adam "
+        "— §Perf A shows the knobs that bring llama3 under; kimi-1T "
+        "training structurally needs >=4 pods (or Adafactor+bf16 "
+        "master) at 16 GiB/chip, as expected for 1T params on 256 chips.",
+        "- multi-pod cells: pod axis joins DP/FSDP; collectives pick up "
+        "the DCN hop (terms are trip-count-uncorrected there; the "
+        "roofline is scored single-pod per the assignment).",
+    ]
+    return "\n".join(lines)
+
+
+def perf_tables():
+    res = load("results/perf")
+    if not res:
+        return ""
+    base = {(r["arch"], r["shape"], r["mesh"]): r
+            for r in load("results/dryrun")}
+    hdr = ("| cell | variant | compute ms | memory ms | collective ms | "
+           "GiB/dev | dominant |\n|---|---|---|---|---|---|---|")
+    rows = []
+    for r in sorted(res, key=lambda x: x.get("variant", {}).get("tag", "")):
+        if r.get("status") != "ok":
+            rows.append(f"| {r.get('arch')}x{r.get('shape')} | "
+                        f"{r.get('variant', {}).get('tag', '?')} | ERROR "
+                        f"{r.get('error', '')[:50]} | | | | |")
+            continue
+        b = base.get((r["arch"], r["shape"], r["mesh"]))
+        t, bt = r["terms"], b["terms"]
+        def delta(new, old):
+            return f"{new*1e3:.2f} ({new/old:.2f}x)" if old else f"{new*1e3:.2f}"
+        rows.append(
+            f"| {r['arch']} x {r['shape']} "
+            f"| {r['variant']['tag']} "
+            f"| {delta(t['compute_s'], bt['compute_s'])} "
+            f"| {delta(t['memory_s'], bt['memory_s'])} "
+            f"| {delta(t['collective_s'], bt['collective_s'])} "
+            f"| {r['memory']['per_device_total_gb']:.2f} "
+            f"(base {b['memory']['per_device_total_gb']:.2f}) "
+            f"| {t['dominant']} |")
+    return "\n".join([hdr] + rows)
+
+
+def main():
+    results = load("results/dryrun")
+    with open("EXPERIMENTS.md") as f:
+        doc = f.read()
+    doc = doc.replace("<!-- DRYRUN-SUMMARY -->", dryrun_summary(results))
+    roof = ("### Single-pod (16x16, 256 chips) — scored table\n\n"
+            + table(results, "pod")
+            + "\n\n### Multi-pod (2x16x16, 512 chips) — compile + memory "
+              "proof (terms uncorrected)\n\n" + table(results, "multipod"))
+    doc = doc.replace("<!-- ROOFLINE-TABLE -->", roof)
+    pt = perf_tables()
+    if pt and "<!-- PERF-VARIANTS -->" in doc:
+        doc = doc.replace("<!-- PERF-VARIANTS -->", pt)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(doc)
+    print("EXPERIMENTS.md rendered;",
+          len([r for r in results if r['status'] == 'ok']), "ok cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""repro: integral-histogram video-analytics framework on TPU.
+
+Reproduction + extension of Poostchi et al., "Fast Integral Histogram
+Computations on GPU for Real-Time Video Analytics" (2017), rebuilt
+TPU-native in JAX/Pallas with a multi-pod distribution runtime and an
+assigned 10-architecture LM model zoo.
+"""
+
+__version__ = "1.0.0"

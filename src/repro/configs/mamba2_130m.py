@@ -1,0 +1,23 @@
+"""Mamba2-130M: attention-free SSD (state-space duality).
+[arXiv:2405.21060; unverified]
+24L d_model=768 vocab=50280, ssm_state=128, expand=2, head_dim=64.
+The SSD chunked scan is the direct 1-D analogue of the paper's WF-TiS
+tiled scan (DESIGN.md par.4)."""
+
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    num_layers=24,
+    d_model=768,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    ssm_groups=1,
+    conv_kernel=4,
+    tie_embeddings=True,
+)

@@ -1,0 +1,43 @@
+"""Histogram similarity/distance metrics used by the analytics layers.
+
+All metrics broadcast over leading axes: (..., b) vs (b,) -> (...).
+Similarities (higher = better): intersection, bhattacharyya.
+Distances (lower = better): chi2, l1, l2.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-8
+
+
+def normalize(h: jnp.ndarray) -> jnp.ndarray:
+    return h / (jnp.sum(h, axis=-1, keepdims=True) + _EPS)
+
+
+def intersection(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Swain-Ballard histogram intersection on normalized histograms."""
+    return jnp.sum(jnp.minimum(normalize(a), normalize(b)), axis=-1)
+
+
+def bhattacharyya(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Bhattacharyya coefficient (similarity in [0, 1])."""
+    return jnp.sum(jnp.sqrt(normalize(a) * normalize(b) + _EPS), axis=-1)
+
+
+def chi2(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    an, bn = normalize(a), normalize(b)
+    return 0.5 * jnp.sum((an - bn) ** 2 / (an + bn + _EPS), axis=-1)
+
+
+def l1(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(jnp.abs(normalize(a) - normalize(b)), axis=-1)
+
+
+def l2(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sqrt(jnp.sum((normalize(a) - normalize(b)) ** 2, axis=-1))
+
+
+SIMILARITIES = {"intersection": intersection, "bhattacharyya": bhattacharyya}
+DISTANCES = {"chi2": chi2, "l1": l1, "l2": l2}

@@ -1,0 +1,58 @@
+"""Public API: the integral histogram as a composable JAX module.
+
+>>> ih = IntegralHistogram(num_bins=32)
+>>> H = ih(image)                          # (32, h, w)
+>>> hist = ih.query(H, [r0, c0, r1, c1])   # O(1) region histogram
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import region_query
+from repro.kernels.ops import integral_histogram as _compute
+
+
+@dataclasses.dataclass(frozen=True)
+class IntegralHistogram:
+    """Configured integral-histogram operator.
+
+    Attributes:
+      num_bins: histogram bins b.
+      method: "cw_b" | "cw_sts" | "cw_tis" | "wf_tis" (paper's four).
+      backend: "auto" (pallas on TPU, jnp elsewhere) | "pallas" | "jnp".
+      tile: spatial tile edge for the tiled methods (128 = MXU native).
+      bin_block: bins per kernel block (8 = sublane count).
+      value_range: integer pixel range (floats are binned over [0, 1)).
+      interpret: run Pallas kernels in interpret mode (CPU validation).
+    """
+
+    num_bins: int = 32
+    method: str = "wf_tis"
+    backend: str = "auto"
+    tile: int = 128
+    bin_block: int = 8
+    value_range: int = 256
+    use_mxu: bool = True
+    interpret: bool = False
+
+    def __call__(self, image: jnp.ndarray) -> jnp.ndarray:
+        return _compute(
+            image,
+            self.num_bins,
+            method=self.method,
+            backend=self.backend,
+            tile=self.tile,
+            bin_block=self.bin_block,
+            use_mxu=self.use_mxu,
+            interpret=self.interpret,
+            value_range=self.value_range,
+        )
+
+    # ---- O(1) analytics on a computed H ----
+    query = staticmethod(region_query.region_histogram)
+    sliding_windows = staticmethod(region_query.sliding_window_histograms)
+    likelihood_map = staticmethod(region_query.likelihood_map)
+    multi_scale_search = staticmethod(region_query.multi_scale_search)

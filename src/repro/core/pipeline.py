@@ -1,0 +1,68 @@
+"""Double-buffered frame pipeline — paper §4.4 (dual-buffering, Fig. 12-14).
+
+The paper overlaps (disk -> host), (host -> device), kernel execution and
+(device -> host) across a frame sequence using two CUDA streams with
+page-locked memory.  The JAX/TPU equivalent:
+
+  * XLA dispatch is asynchronous: enqueueing a jitted computation returns
+    immediately; only blocking on results synchronizes.
+  * `DoubleBufferedExecutor` keeps `depth` frames in flight — it stages
+    frame t+1 onto the device (device_put ~ cudaMemcpyAsync H2D) while the
+    kernel for frame t runs, and only blocks on frame t-depth+1's result
+    (~ D2H of the previous integral histogram).
+  * depth=1 degenerates to fully synchronous execution — the "no
+    dual-buffering" baseline of Fig. 13.
+
+On real TPUs the same code overlaps PCIe/DCN infeed with TPU compute; on
+CPU it overlaps host staging with XLA:CPU's async execution, which is what
+benchmarks/bench_pipeline.py measures.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Callable, Iterable, Iterator
+
+import jax
+import numpy as np
+
+
+class DoubleBufferedExecutor:
+    """Apply a jitted fn over a stream of host frames with dispatch-ahead."""
+
+    def __init__(self, fn: Callable, depth: int = 2, device=None):
+        if depth < 1:
+            raise ValueError("depth must be >= 1")
+        self.fn = fn
+        self.depth = depth
+        self.device = device or jax.devices()[0]
+
+    def map(self, frames: Iterable[np.ndarray]) -> Iterator[jax.Array]:
+        """Yield fn(frame) for each frame, keeping `depth` frames in flight."""
+        inflight: collections.deque = collections.deque()
+        for frame in frames:
+            staged = jax.device_put(frame, self.device)   # async H2D
+            inflight.append(self.fn(staged))              # async dispatch
+            if len(inflight) >= self.depth:
+                out = inflight.popleft()
+                out.block_until_ready()                   # ~ D2H sync point
+                yield out
+        while inflight:
+            out = inflight.popleft()
+            out.block_until_ready()
+            yield out
+
+
+def prefetch_to_device(
+    frames: Iterable[np.ndarray], size: int = 2, device=None
+) -> Iterator[jax.Array]:
+    """Stage host arrays onto the device `size` steps ahead of consumption
+    (training input pipeline building block; see data/prefetch.py)."""
+    device = device or jax.devices()[0]
+    queue: collections.deque = collections.deque()
+    for frame in frames:
+        queue.append(jax.device_put(frame, device))
+        if len(queue) > size:
+            yield queue.popleft()
+    while queue:
+        yield queue.popleft()

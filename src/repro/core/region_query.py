@@ -1,0 +1,105 @@
+"""O(1) region-histogram queries over an integral histogram (paper Eq. 2).
+
+h(R, b) = H(r1, c1, b) - H(r0-1, c1, b) - H(r1, c0-1, b) + H(r0-1, c0-1, b)
+
+for the inclusive region R = [r0..r1] x [c0..c1].  Corners with index -1
+read as 0 (the virtual zero row/column of the inclusive integral image).
+
+Also implements the paper's headline use case: multi-scale exhaustive
+search — histograms of *every* sliding window extracted in constant time
+per window — and target likelihood maps for tracking/detection.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _corner(H: jnp.ndarray, r: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """H[:, r, c] with r/c == -1 reading as 0.  r, c: broadcastable int arrays.
+
+    Returns shape (*r.shape, b).
+    """
+    rc = jnp.clip(r, 0, None)
+    cc = jnp.clip(c, 0, None)
+    # (b, h, w) -> gather -> (b, *idx); move bins last for query ergonomics.
+    vals = H[:, rc, cc]
+    valid = ((r >= 0) & (c >= 0)).astype(H.dtype)
+    return jnp.moveaxis(vals, 0, -1) * valid[..., None]
+
+
+def region_histogram(H: jnp.ndarray, rects: jnp.ndarray) -> jnp.ndarray:
+    """Histograms of inclusive regions.
+
+    Args:
+      H: (b, h, w) integral histogram.
+      rects: (..., 4) int32 [r0, c0, r1, c1], inclusive coordinates.
+
+    Returns:
+      (..., b) region histograms.
+    """
+    r0, c0, r1, c1 = (rects[..., i] for i in range(4))
+    return (
+        _corner(H, r1, c1)
+        - _corner(H, r0 - 1, c1)
+        - _corner(H, r1, c0 - 1)
+        + _corner(H, r0 - 1, c0 - 1)
+    )
+
+
+def sliding_window_histograms(
+    H: jnp.ndarray, window: tuple[int, int], stride: int = 1
+) -> jnp.ndarray:
+    """Histograms of every (wh, ww) window at the given stride.
+
+    Returns (n_rows, n_cols, b) — one O(1) query per window position; this
+    is the constant-time multi-scale exhaustive search of the paper.
+    """
+    _, h, w = H.shape
+    wh, ww = window
+    rows = jnp.arange(0, h - wh + 1, stride)
+    cols = jnp.arange(0, w - ww + 1, stride)
+    r0 = rows[:, None]
+    c0 = cols[None, :]
+    rects = jnp.stack(
+        jnp.broadcast_arrays(r0, c0, r0 + wh - 1, c0 + ww - 1), axis=-1
+    )
+    return region_histogram(H, rects)
+
+
+def multi_scale_search(
+    H: jnp.ndarray,
+    target_hist: jnp.ndarray,
+    windows: tuple[tuple[int, int], ...],
+    metric,
+    stride: int = 1,
+):
+    """Best-matching window across scales.
+
+    Returns (best_rect[4], best_score, per_scale_maps) where ``metric`` is a
+    similarity (higher = better) from core/distances.py.
+    """
+    best_rect = jnp.zeros((4,), jnp.int32)
+    best_score = -jnp.inf
+    maps = []
+    for wh, ww in windows:
+        hists = sliding_window_histograms(H, (wh, ww), stride)
+        scores = metric(hists, target_hist)          # (n_rows, n_cols)
+        maps.append(scores)
+        idx = jnp.argmax(scores)
+        r, c = jnp.unravel_index(idx, scores.shape)
+        r0, c0 = r * stride, c * stride
+        rect = jnp.array([r0, c0, r0 + wh - 1, c0 + ww - 1], jnp.int32)
+        score = scores.reshape(-1)[idx]
+        best_rect = jnp.where(score > best_score, rect, best_rect)
+        best_score = jnp.maximum(score, best_score)
+    return best_rect, best_score, maps
+
+
+def likelihood_map(H: jnp.ndarray, target_hist: jnp.ndarray,
+                   window: tuple[int, int], metric, stride: int = 1):
+    """Feature likelihood map (abstract, ¶1): per-position similarity of the
+    window histogram to the target histogram."""
+    hists = sliding_window_histograms(H, window, stride)
+    return metric(hists, target_hist)

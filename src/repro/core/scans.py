@@ -1,0 +1,124 @@
+"""The paper's four integral-histogram computation strategies, jnp level.
+
+CW-B    — cross-weave baseline: unbatched per-bin scan/transpose/scan
+          composition (faithful to the paper's "many tiny kernels" storm;
+          on XLA the launch overhead becomes trace/HLO blow-up and lost
+          fusion, and its HBM-traffic model keeps the 6-pass floor).
+CW-STS  — single batched scan -> materialized 3-D transpose -> scan.
+CW-TiS  — tiled horizontal strip scan then tiled vertical strip scan,
+          no transpose (4 HBM passes).  Pallas kernel: kernels/cw_tis.py.
+WF-TiS  — single fused pass: per-tile h-scan + v-scan with boundary
+          carries (2 HBM passes).  Pallas kernel: kernels/wf_tis.py.
+
+The jnp versions here are schedule-faithful restatements used as CPU
+executables (wall-time benchmarks) and as shape/semantics references; the
+TPU-native schedules live in repro/kernels/.  All return (b, h, w)
+inclusive integral histograms identical to kernels/ref.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binning import bin_indices, one_hot_bins
+
+
+# ---------------------------------------------------------------------------
+# CW-B: naive baseline — bins processed one at a time, rows/cols as separate
+# scan primitives (Algorithm 2 of the paper).
+# ---------------------------------------------------------------------------
+def cw_b(image: jnp.ndarray, num_bins: int, value_range: int = 256) -> jnp.ndarray:
+    idx = bin_indices(image, num_bins, value_range)
+    outs = []
+    for b in range(num_bins):  # one "kernel launch" chain per bin (faithful)
+        q = (idx == b).astype(jnp.float32)
+        h_scanned = jnp.cumsum(q, axis=1)          # horizontal prescan
+        t = jnp.swapaxes(h_scanned, 0, 1)          # 2-D transpose (materialized)
+        v_scanned = jnp.cumsum(t, axis=1)          # vertical prescan (as rows)
+        outs.append(jnp.swapaxes(v_scanned, 0, 1))
+    return jnp.stack(outs, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# CW-STS: one batched scan, one 3-D transpose, one batched scan (Algorithm 3).
+# ---------------------------------------------------------------------------
+def cw_sts(image: jnp.ndarray, num_bins: int, value_range: int = 256) -> jnp.ndarray:
+    idx = bin_indices(image, num_bins, value_range)
+    q = one_hot_bins(idx, num_bins)                          # (b, h, w) init pass
+    h_scanned = jnp.cumsum(q, axis=2)                        # batched row scan
+    transposed = jnp.swapaxes(h_scanned, 1, 2).copy()        # 3-D transpose
+    v_scanned = jnp.cumsum(transposed, axis=2)               # batched "row" scan
+    return jnp.swapaxes(v_scanned, 1, 2)                     # back to (b, h, w)
+
+
+# ---------------------------------------------------------------------------
+# Tiled building block: blocked inclusive cumsum along the last axis —
+# per-tile local scan + exclusive carry of tile totals (the strip schedule
+# of CW-TiS, Fig. 5 of the paper).
+# ---------------------------------------------------------------------------
+def _blocked_cumsum_last(x: jnp.ndarray, tile: int) -> jnp.ndarray:
+    *lead, n = x.shape
+    if n % tile:
+        raise ValueError(f"axis {n} not divisible by tile {tile}")
+    xt = x.reshape(*lead, n // tile, tile)
+    local = jnp.cumsum(xt, axis=-1)                          # intra-tile scan
+    totals = local[..., -1]                                  # per-tile sums
+    carry = jnp.cumsum(totals, axis=-1) - totals             # exclusive carry
+    return (local + carry[..., None]).reshape(*lead, n)
+
+
+def _pad_idx(idx: jnp.ndarray, th: int, tw: int) -> jnp.ndarray:
+    """Pad a bin-index image to tile multiples; padding matches no bin."""
+    from repro.core.binning import PAD_BIN
+
+    h, w = idx.shape
+    ph, pw = (-h) % th, (-w) % tw
+    if ph or pw:
+        idx = jnp.pad(idx, ((0, ph), (0, pw)), constant_values=PAD_BIN)
+    return idx
+
+
+def cw_tis(
+    image: jnp.ndarray, num_bins: int, value_range: int = 256, tile: int = 128
+) -> jnp.ndarray:
+    idx = bin_indices(image, num_bins, value_range)
+    h, w = image.shape
+    th, tw = min(tile, h), min(tile, w)
+    idx = _pad_idx(idx, th, tw)
+    q = one_hot_bins(idx, num_bins)
+    h_scanned = _blocked_cumsum_last(q, tw)                  # horizontal strips
+    v_scanned = _blocked_cumsum_last(jnp.swapaxes(h_scanned, 1, 2), th)
+    return jnp.swapaxes(v_scanned, 1, 2)[:, :h, :w]
+
+
+# ---------------------------------------------------------------------------
+# WF-TiS: fused single pass.  The jnp statement of "h-scan then v-scan with
+# tile carries, one sweep" — XLA fuses it; the true 2-HBM-pass schedule is
+# the Pallas kernel.  A lax.scan over row strips keeps the carry structure
+# explicit (the (b, w) column carry is exactly the kernel's VMEM scratch).
+# ---------------------------------------------------------------------------
+def wf_tis(
+    image: jnp.ndarray, num_bins: int, value_range: int = 256, tile: int = 128
+) -> jnp.ndarray:
+    idx = bin_indices(image, num_bins, value_range)
+    h, w = image.shape
+    th = min(tile, h)
+    idx = _pad_idx(idx, th, 1)
+    hp = idx.shape[0]
+    idx_strips = idx.reshape(hp // th, th, w)
+
+    def strip_step(col_carry, idx_strip):
+        # col_carry: (b, w) running column sums of everything above.
+        q = one_hot_bins(idx_strip, num_bins)                # (b, th, w)
+        hs = jnp.cumsum(q, axis=2)                           # horizontal scan
+        vs = jnp.cumsum(hs, axis=1)                          # vertical within strip
+        out = vs + col_carry[:, None, :]
+        return out[:, -1, :], out                            # new carry, strip H
+
+    zero = jnp.zeros((num_bins, w), dtype=jnp.float32)
+    _, strips = jax.lax.scan(strip_step, zero, idx_strips)
+    return jnp.moveaxis(strips, 1, 0).reshape(num_bins, hp, w)[:, :h, :]
+
+
+METHODS = {"cw_b": cw_b, "cw_sts": cw_sts, "cw_tis": cw_tis, "wf_tis": wf_tis}

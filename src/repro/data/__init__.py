@@ -1,0 +1,11 @@
+"""Synthetic deterministic data pipelines + host->device prefetch."""
+
+from repro.data.synthetic import (
+    MultimodalStream, TokenStream, make_stream, video_frames,
+)
+from repro.core.pipeline import DoubleBufferedExecutor, prefetch_to_device
+
+__all__ = [
+    "MultimodalStream", "TokenStream", "make_stream", "video_frames",
+    "DoubleBufferedExecutor", "prefetch_to_device",
+]

@@ -1,0 +1,115 @@
+"""Deterministic, seekable synthetic data — the fault-tolerance substrate.
+
+`batch_at(step)` is a pure function of (seed, step): resuming training
+from a checkpoint at step k replays exactly the batches k, k+1, ... with
+no stored cursor state.  This is the data-side half of checkpoint/restart
+(train/fault.py); tests assert bit-exact resume.
+
+Also provides the deterministic video-frame generator used by the
+integral-histogram examples and benchmarks (moving blobs over textured
+noise — content-independent for the kernels, but gives the tracker
+something to track).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenStream:
+    """Synthetic LM data: shifted-label random tokens + structure.
+
+    Tokens mix a deterministic arithmetic pattern with PRNG noise so the
+    loss is learnable (the examples' loss curves actually go down).
+    """
+    vocab_size: int
+    batch: int
+    seq_len: int
+    seed: int = 0
+    pattern_frac: float = 0.7
+
+    def batch_at(self, step: int) -> dict:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        k1, k2, k3 = jax.random.split(key, 3)
+        b, s, v = self.batch, self.seq_len, self.vocab_size
+        # arithmetic progressions (learnable) + uniform noise (not)
+        start = jax.random.randint(k1, (b, 1), 0, v)
+        stride = jax.random.randint(k2, (b, 1), 1, 7)
+        pattern = (start + stride * jnp.arange(s + 1)[None, :]) % v
+        noise = jax.random.randint(k3, (b, s + 1), 0, v)
+        use_pattern = (
+            jax.random.uniform(k1, (b, 1)) < self.pattern_frac)
+        toks = jnp.where(use_pattern, pattern, noise).astype(jnp.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+@dataclasses.dataclass(frozen=True)
+class MultimodalStream:
+    """TokenStream + stub modality embeddings (vlm/audio assignments)."""
+    base: TokenStream
+    d_model: int
+    num_prefix: int = 0            # vlm: patch embeddings
+    src_len: int = 0               # audio: encoder frame embeddings
+    dtype: str = "bfloat16"
+
+    def batch_at(self, step: int) -> dict:
+        out = self.base.batch_at(step)
+        key = jax.random.fold_in(
+            jax.random.PRNGKey(self.base.seed + 77), step)
+        if self.num_prefix:
+            out["prefix_embeds"] = 0.02 * jax.random.normal(
+                key, (self.base.batch, self.num_prefix, self.d_model)
+            ).astype(self.dtype)
+        if self.src_len:
+            out["src_embeds"] = 0.02 * jax.random.normal(
+                key, (self.base.batch, self.src_len, self.d_model)
+            ).astype(self.dtype)
+        return out
+
+
+def make_stream(cfg, batch: int, seq_len: int, seed: int = 0):
+    """Family-appropriate stream for a ModelConfig."""
+    base = TokenStream(cfg.vocab_size, batch, seq_len, seed)
+    if cfg.family == "vlm":
+        return MultimodalStream(
+            TokenStream(cfg.vocab_size, batch, seq_len - cfg.num_prefix_embeds,
+                        seed),
+            cfg.d_model, num_prefix=cfg.num_prefix_embeds)
+    if cfg.family == "audio":
+        return MultimodalStream(base, cfg.d_model, src_len=seq_len)
+    return base
+
+
+# ---------------------------------------------------------------------------
+# Video frames (integral-histogram substrate)
+# ---------------------------------------------------------------------------
+def video_frames(h: int, w: int, num_frames: int, seed: int = 0,
+                 num_blobs: int = 3) -> np.ndarray:
+    """Deterministic uint8 frame sequence: moving Gaussian blobs over
+    banded texture.  Shape (num_frames, h, w)."""
+    rng = np.random.default_rng(seed)
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float32)
+    base = (
+        40.0 * (1 + np.sin(2 * np.pi * yy / 64))
+        + 40.0 * (1 + np.sin(2 * np.pi * xx / 96))
+    )
+    pos = rng.uniform(0.2, 0.8, (num_blobs, 2)) * [h, w]
+    vel = rng.uniform(-4, 4, (num_blobs, 2))
+    amp = rng.uniform(60, 120, (num_blobs,))
+    sig = rng.uniform(h / 16, h / 6, (num_blobs,))
+    frames = np.empty((num_frames, h, w), np.uint8)
+    for t in range(num_frames):
+        img = base + 8.0 * rng.standard_normal((h, w)).astype(np.float32)
+        for i in range(num_blobs):
+            cy, cx = pos[i]
+            img += amp[i] * np.exp(
+                -((yy - cy) ** 2 + (xx - cx) ** 2) / (2 * sig[i] ** 2))
+            pos[i] += vel[i]
+            pos[i] %= [h, w]
+        frames[t] = np.clip(img, 0, 255).astype(np.uint8)
+    return frames

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot spot (the tiled scans).
+
+wf_tis.py — fused single-pass wavefront tiled scan (paper's fastest).
+cw_tis.py — two-pass tiled horizontal/vertical scan.
+ops.py    — jit'd dispatch + padding.
+ref.py    — pure-jnp oracle every kernel is tested against.
+"""
+
+from repro.kernels.ops import integral_histogram
+from repro.kernels.ref import integral_histogram_ref
+
+__all__ = ["integral_histogram", "integral_histogram_ref"]

@@ -1,0 +1,81 @@
+"""Jit'd public wrappers around the integral-histogram kernels.
+
+``integral_histogram`` is the framework's single entry point: it bins the
+image, pads spatial dims to tile multiples and bins to bin-block multiples
+(padding pixels get PAD_BIN so they match no bin), dispatches to the chosen
+method/backend, and crops the result back.
+
+Backends:
+  "pallas"  — the TPU kernels (on CPU only with interpret=True; tests do).
+  "jnp"     — the schedule-faithful jnp restatements (XLA-compiled; used
+              for CPU wall-time benchmarks and as the production path on
+              non-TPU hosts).
+  "auto"    — pallas on TPU, jnp elsewhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scans
+from repro.core.binning import PAD_BIN, bin_indices
+from repro.kernels.cw_tis import cw_tis_pallas
+from repro.kernels.wf_tis import wf_tis_pallas
+
+PALLAS_METHODS = {"cw_tis": cw_tis_pallas, "wf_tis": wf_tis_pallas}
+
+
+def _pad_to(x: jnp.ndarray, mult_h: int, mult_w: int, fill) -> jnp.ndarray:
+    h, w = x.shape
+    ph = (-h) % mult_h
+    pw = (-w) % mult_w
+    if ph or pw:
+        x = jnp.pad(x, ((0, ph), (0, pw)), constant_values=fill)
+    return x
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "num_bins", "method", "backend", "tile", "bin_block", "use_mxu",
+        "interpret", "value_range",
+    ),
+)
+def integral_histogram(
+    image: jnp.ndarray,
+    num_bins: int,
+    *,
+    method: str = "wf_tis",
+    backend: str = "auto",
+    tile: int = 128,
+    bin_block: int = 8,
+    use_mxu: bool = True,
+    interpret: bool = False,
+    value_range: int = 256,
+) -> jnp.ndarray:
+    """Compute the (num_bins, h, w) inclusive integral histogram of image."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "jnp"
+
+    if backend == "jnp" or method not in PALLAS_METHODS:
+        if method not in scans.METHODS:
+            raise ValueError(f"unknown method {method!r}")
+        kw = {} if method in ("cw_b", "cw_sts") else {"tile": tile}
+        return scans.METHODS[method](image, num_bins, value_range, **kw)
+
+    h, w = image.shape
+    idx = bin_indices(image, num_bins, value_range)
+    idx = _pad_to(idx, tile, tile, PAD_BIN)
+    nb_pad = num_bins + (-num_bins) % bin_block
+    out = PALLAS_METHODS[method](
+        idx, nb_pad, tile=tile, bin_block=bin_block, use_mxu=use_mxu,
+        interpret=interpret,
+    )
+    return out[:num_bins, :h, :w]

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the integral histogram kernels.
+
+H(b, x, y) = sum_{r<=x} sum_{c<=y} Q(I(r, c), b)        (paper Eq. 1)
+
+Inclusive on both spatial axes, matching Algorithm 1 of the paper.  Every
+Pallas kernel and every scan method in core/scans.py is tested allclose
+against this function.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.binning import bin_indices, one_hot_bins
+
+
+def integral_histogram_ref(
+    image: jnp.ndarray,
+    num_bins: int,
+    value_range: int = 256,
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Oracle: (h, w) image -> (num_bins, h, w) inclusive integral histogram."""
+    idx = bin_indices(image, num_bins, value_range)
+    q = one_hot_bins(idx, num_bins, dtype=dtype)
+    return jnp.cumsum(jnp.cumsum(q, axis=1), axis=2)
+
+
+def region_histogram_ref(
+    image: jnp.ndarray,
+    num_bins: int,
+    r0: int,
+    c0: int,
+    r1: int,
+    c1: int,
+    value_range: int = 256,
+) -> jnp.ndarray:
+    """Direct (no integral image) histogram of the inclusive region
+    [r0..r1] x [c0..c1] — the ground truth for Eq. (2) queries."""
+    patch = image[r0 : r1 + 1, c0 : c1 + 1]
+    idx = bin_indices(patch, num_bins, value_range)
+    return jnp.sum(one_hot_bins(idx, num_bins), axis=(1, 2))

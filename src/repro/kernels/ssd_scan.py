@@ -1,0 +1,121 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan (G=1 groups).
+
+This is the WF-TiS pattern (kernels/wf_tis.py) transplanted to the model
+zoo's hot spot: the sequence is tiled into chunks; each grid step
+computes the intra-chunk quadratic form on the MXU and carries the
+(state, decay) boundary summary in VMEM scratch across the sequential
+TPU grid — exactly the tiled-scan-plus-carry structure of the paper,
+with the SSD state playing the role of the column carry.
+
+Grid: (B, H, num_chunks), chunks innermost (carry resets at chunk 0).
+Math (fp32):  h_t = exp(a_t) h_{t-1} + B_t (dt x)_t^T ;  y_t = C_t h_t.
+
+ref: models/ssm.ssd_chunked (pure jnp oracle, tested allclose).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def _tril_ones(q: int, dtype=jnp.float32):
+    r = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    return (r >= c).astype(dtype)
+
+
+def _ssd_kernel(a_ref, xdt_ref, b_ref, c_ref, y_ref, state, logdec):
+    ci = pl.program_id(2)
+
+    a = a_ref[0, 0, :]                                   # (Q,)
+    xdt = xdt_ref[0, 0]                                  # (Q, P)
+    Bq = b_ref[0]                                        # (Q, N)
+    Cq = c_ref[0]                                        # (Q, N)
+    q = a.shape[0]
+
+    # intra-chunk cumulative log-decay via MXU triangular matmul
+    tril = _tril_ones(q)
+    a_cum = jnp.dot(tril, a, preferred_element_type=jnp.float32)   # (Q,)
+    total = a_cum[-1]
+
+    # decay mask L[i, j] = exp(a_cum_i - a_cum_j), j <= i
+    L = jnp.where(tril > 0, jnp.exp(a_cum[:, None] - a_cum[None, :]), 0.0)
+    scores = jnp.dot(Cq, Bq.T, preferred_element_type=jnp.float32)  # (Q,Q)
+    y_intra = jnp.dot(scores * L, xdt,
+                      preferred_element_type=jnp.float32)           # (Q,P)
+
+    # carried state from previous chunks (reset at chunk 0)
+    h_prev = jnp.where(ci == 0, 0.0, state[...])                    # (N,P)
+    y_inter = jnp.dot(Cq, h_prev,
+                      preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(a_cum)[:, None]
+
+    # boundary carry: decayed old state + this chunk's contribution
+    decay_out = jnp.exp(total - a_cum)                              # (Q,)
+    h_new = jnp.exp(total) * h_prev + jnp.dot(
+        Bq.T, xdt * decay_out[:, None],
+        preferred_element_type=jnp.float32)
+    state[...] = h_new
+    logdec[0] = total
+
+    y_ref[0, 0] = y_intra + y_inter
+
+
+def ssd_scan_pallas(a, xdt, Bm, Cm, *, chunk: int = 128,
+                    interpret: bool = False):
+    """SSD scan. a: (B,H,S) log-decays; xdt: (B,H,S,P); Bm/Cm: (B,S,N).
+
+    Returns y: (B, H, S, P) fp32.  S must be a multiple of `chunk`
+    (pad with a=0, xdt=0 upstream — identity steps).
+    """
+    b, h, s = a.shape
+    p = xdt.shape[-1]
+    n = Bm.shape[-1]
+    if s % chunk:
+        raise ValueError(f"S={s} not divisible by chunk={chunk}")
+    nc = s // chunk
+
+    grid = (b, h, nc)
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk), lambda bi, hi, ci: (bi, hi, ci)),
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p),
+                               lambda bi, hi, ci: (bi, hi, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, p), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((n, p), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, xdt, Bm, Cm)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret: bool = False):
+    """ops-style wrapper matching models/ssm.ssd_chunked's signature.
+
+    x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,G=1,N).
+    Returns y (B,S,H,P) fp32.
+    """
+    a = jnp.swapaxes(dt * A, 1, 2)                     # (B,H,S)
+    xdt = jnp.moveaxis(x * dt[..., None], 2, 1)        # (B,H,S,P)
+    y = ssd_scan_pallas(a.astype(jnp.float32), xdt.astype(jnp.float32),
+                        Bm[:, :, 0].astype(jnp.float32),
+                        Cm[:, :, 0].astype(jnp.float32),
+                        chunk=chunk, interpret=interpret)
+    return jnp.moveaxis(y, 1, 2)                       # (B,S,H,P)

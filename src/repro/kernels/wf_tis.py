@@ -1,0 +1,177 @@
+"""WF-TiS: fused Wave-Front Tiled Scan integral histogram — Pallas TPU kernel.
+
+Paper (§3.5): one kernel computes per-tile horizontal AND vertical scans,
+tiles scheduled on anti-diagonal wavefronts so independent GPU thread
+blocks can run as soon as their left+top neighbours finish; boundary
+columns are spilled to global memory.  Net effect: the b*h*w tensor is
+read/written exactly once each (2 HBM passes) instead of CW-TiS's 4.
+
+TPU adaptation (DESIGN.md §2):
+  * A TPU core executes the Pallas grid sequentially in row-major order, so
+    left+top dependencies are satisfied without diagonal scheduling; the
+    wavefront becomes a raster walk with carries in VMEM scratch that
+    persist across grid steps (GPU shared memory cannot do this).
+  * The per-tile prefix sums are computed on the MXU as triangular-ones
+    matmuls: row-cumsum(X) = X @ triu(1), col-cumsum(X) = tril(1) @ X.
+    A 128x128 tile cumsum is a single systolic pass — far cheaper than a
+    log-depth shift-add ladder on the VPU (see DESIGN.md napkin math).
+  * Binning is fused: the kernel reads the int32 bin-index image and forms
+    the one-hot mask in VREGs — the paper's separate init kernel (a full
+    extra write+read of b*h*w) never exists.  This is a beyond-paper win,
+    reducing the HBM floor from 2 passes + init to (1/b read + 1 write).
+  * Grid order is (row_tiles, col_tiles, bin_blocks) with bins innermost:
+    consecutive grid steps reuse the same image block, so Pallas fetches
+    each image tile from HBM once, not once per bin block.
+
+Accumulation is fp32 (exact for counts < 2**24; all supported planes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-specific pallas helpers; interpret mode works without a TPU.
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def _triu_ones(n: int, dtype=jnp.float32):
+    r = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    return (r <= c).astype(dtype)
+
+
+def _tril_ones(n: int, dtype=jnp.float32):
+    r = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    return (r >= c).astype(dtype)
+
+
+def _row_scan_mxu(x: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive cumsum along the last axis via MXU: X @ triu(1)."""
+    tw = x.shape[-1]
+    return jax.lax.dot_general(
+        x,
+        _triu_ones(tw, x.dtype),
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _col_scan_mxu(x: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive cumsum along axis -2 via MXU: tril(1) @ X (batched).
+
+    out[b, i, j] = sum_r tril[i, r] * x[b, r, j] — expressed as a batched
+    dot_general (tril broadcast over the bin-block batch) so the result
+    keeps (batch, row, col) layout without a post-transpose.
+    """
+    b, th = x.shape[0], x.shape[-2]
+    tril = jnp.broadcast_to(_tril_ones(th, x.dtype), (b, th, th))
+    return jax.lax.dot_general(
+        tril,
+        x,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _wf_tis_kernel(
+    idx_ref,      # (TH, TW) int32 bin indices (PAD_BIN=-1 outside the image)
+    out_ref,      # (BIN_BLOCK, TH, TW) fp32 integral histogram block
+    row_carry,    # VMEM scratch (NBB, BIN_BLOCK, TH) — right-edge carries
+    col_carry,    # VMEM scratch (NBB, BIN_BLOCK, W_PAD) — bottom-edge carries
+    *,
+    bin_block: int,
+    tile_w: int,
+    use_mxu: bool,
+):
+    ih = pl.program_id(0)
+    iw = pl.program_id(1)
+    bb = pl.program_id(2)
+
+    idx = idx_ref[...]
+    th, tw = idx.shape
+
+    # Fused binning: one-hot mask for this block of bins, formed in VREGs.
+    bin_ids = bb * bin_block + jax.lax.broadcasted_iota(
+        jnp.int32, (bin_block, th, tw), 0
+    )
+    mask = (idx[None, :, :] == bin_ids).astype(jnp.float32)
+
+    # ---- horizontal scan within the tile (MXU triangular matmul) ----
+    if use_mxu:
+        hs = _row_scan_mxu(mask)
+    else:
+        hs = jnp.cumsum(mask, axis=2)
+
+    # Add the running row carry (prefix of everything left of this tile in
+    # the current row strip), zeroed at the first column of tiles.
+    rc = jnp.where(iw == 0, 0.0, row_carry[bb])            # (BIN_BLOCK, TH)
+    hs = hs + rc[:, :, None]
+    row_carry[bb] = hs[:, :, -1]                           # new right edge
+
+    # ---- vertical scan within the tile ----
+    if use_mxu:
+        vs = _col_scan_mxu(hs)
+    else:
+        vs = jnp.cumsum(hs, axis=1)
+
+    # Add the running column carry (full integral at the last row of the
+    # strip above), zeroed on the first strip.
+    cols = pl.dslice(iw * tile_w, tile_w)
+    cc = jnp.where(ih == 0, 0.0, col_carry[bb, :, cols])   # (BIN_BLOCK, TW)
+    vs = vs + cc[:, None, :]
+    col_carry[bb, :, cols] = vs[:, -1, :]                  # new bottom edge
+
+    out_ref[...] = vs
+
+
+def wf_tis_pallas(
+    idx: jnp.ndarray,
+    num_bins: int,
+    *,
+    tile: int = 128,
+    bin_block: int = 8,
+    use_mxu: bool = True,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused WF-TiS integral histogram.
+
+    Args:
+      idx: (h, w) int32 bin indices, already padded so h % tile == 0 and
+        w % tile == 0 (padding uses PAD_BIN so it matches no bin).
+      num_bins: padded bin count, multiple of ``bin_block``.
+
+    Returns:
+      (num_bins, h, w) fp32 inclusive integral histogram.
+    """
+    h, w = idx.shape
+    if h % tile or w % tile:
+        raise ValueError(f"padded image {h}x{w} not divisible by tile {tile}")
+    if num_bins % bin_block:
+        raise ValueError(f"{num_bins} bins not divisible by bin_block {bin_block}")
+    nth, ntw, nbb = h // tile, w // tile, num_bins // bin_block
+
+    kernel = functools.partial(
+        _wf_tis_kernel, bin_block=bin_block, tile_w=tile, use_mxu=use_mxu
+    )
+    scratch = [
+        pltpu.VMEM((nbb, bin_block, tile), jnp.float32),  # row carries
+        pltpu.VMEM((nbb, bin_block, w), jnp.float32),     # column carries
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=(nth, ntw, nbb),
+        in_specs=[pl.BlockSpec((tile, tile), lambda ih, iw, bb: (ih, iw))],
+        out_specs=pl.BlockSpec(
+            (bin_block, tile, tile), lambda ih, iw, bb: (bb, ih, iw)
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_bins, h, w), jnp.float32),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(idx)

@@ -1,0 +1,118 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), per the assignment:
+
+  compute    = HLO_FLOPs / (chips x 197e12 bf16 FLOP/s)
+  memory     = HLO_bytes / (chips x 819e9 B/s HBM)
+  collective = collective_bytes / (chips x 50e9 B/s per ICI link)
+
+`compiled.cost_analysis()` yields per-device FLOPs/bytes (the partitioned
+module).  collective_bytes is parsed from the compiled HLO text: for every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+we take the RESULT shape bytes and convert to per-device wire bytes with
+ring formulas (all-reduce 2x, others 1x of the data each device handles).
+The parse also returns a per-op-kind breakdown — the §Perf iterations are
+driven by which collective dominates.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+from repro.config import HW
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# `%x = TYPE opname(` — TYPE may be a tuple; capture up to the op name.
+_OP_RE = re.compile(
+    r"=\s+(?P<type>\(.*?\)|\S+?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z]+\d*[a-z0-9]*)\[(?P<dims>[\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device wire bytes by collective kind (+ 'total')."""
+    out: dict = defaultdict(int)
+    counts: dict = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        op = m.group("op")
+        nbytes = _shape_bytes(m.group("type"))
+        # ring cost per device, relative to the result bytes R:
+        #   all-reduce: 2R (reduce-scatter + all-gather phases)
+        #   others:     1R (each element crosses links ~once per device)
+        wire = 2 * nbytes if op == "all-reduce" else nbytes
+        out[op] += wire
+        counts[op] += 1
+    out_d = dict(out)
+    out_d["total"] = sum(out.values())
+    out_d["counts"] = dict(counts)
+    return out_d
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> dict:
+    """Seconds per step for each roofline term (per-chip quantities)."""
+    t_compute = flops_per_dev / HW["peak_flops_bf16"]
+    t_memory = bytes_per_dev / HW["hbm_bw"]
+    t_coll = coll_bytes_per_dev / HW["ici_link_bw"]
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom.replace("_s", "")
+    total = max(t_compute, t_memory, t_coll)
+    terms["bound_s"] = total
+    terms["roofline_fraction"] = (t_compute / total) if total > 0 else 0.0
+    return terms
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """6*N*D with N = active params, D = tokens processed this step."""
+    n = cfg.active_param_count()
+    if kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d              # forward only
+    d = shape.global_batch * 1          # decode: one token per request
+    return 2.0 * n * d
+
+
+def summarize(result: dict) -> str:
+    """One text row for EXPERIMENTS.md tables."""
+    t = result["terms"]
+    return (
+        f"| {result['arch']} | {result['shape']} | {result['mesh']} "
+        f"| {t['compute_s']*1e3:9.3f} | {t['memory_s']*1e3:9.3f} "
+        f"| {t['collective_s']*1e3:9.3f} | {t['dominant']:10s} "
+        f"| {result.get('useful_flops_ratio', 0):5.2f} "
+        f"| {result['memory'].get('per_device_total_gb', -1):7.2f} |"
+    )

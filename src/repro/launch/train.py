@@ -1,0 +1,111 @@
+"""End-to-end training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \
+      --steps 200 --batch 8 --seq 256 [--smoke] [--mesh host]
+
+On the CPU container use --smoke (reduced config).  On a real fleet the
+same entry point runs the full config under the production mesh: state and
+batch shardings come from sharding/rules.py, the data stream is seekable,
+checkpoints are atomic, and the loop restarts on failure (train/fault.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.data import make_stream
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.sharding.rules import ShardingRules, sharding_context
+from repro.train import (
+    CheckpointManager, FaultInjector, Watchdog, init_state, make_optimizer,
+    make_train_step, state_shardings, batch_shardings,
+)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", choices=("none", "host", "pod", "multipod"),
+                    default="none")
+    ap.add_argument("--fail-at", type=int, nargs="*", default=(),
+                    help="inject failures at these steps (demo/testing)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    opt = make_optimizer(cfg, peak_lr=args.lr, warmup=max(args.steps // 20, 5),
+                         total_steps=args.steps)
+    stream = make_stream(cfg, args.batch, args.seq, args.seed)
+
+    mesh = None
+    if args.mesh == "host":
+        mesh = make_host_mesh()
+    elif args.mesh in ("pod", "multipod"):
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+
+    step_fn = make_train_step(cfg, opt, num_microbatches=args.microbatches,
+                              compress=args.compress_grads)
+
+    def init_fn():
+        return init_state(jax.random.PRNGKey(args.seed), cfg, opt,
+                          compress=args.compress_grads)
+
+    st_sh = None
+    if mesh is not None:
+        rules = ShardingRules()
+        state_shape = jax.eval_shape(init_fn)
+        st_sh = state_shardings(state_shape, mesh, rules)
+        b_sh = batch_shardings(
+            jax.eval_shape(lambda: stream.batch_at(0)), mesh, rules)
+        ctx = sharding_context(mesh, rules)
+        with ctx:
+            jitted = jax.jit(step_fn, in_shardings=(st_sh, b_sh),
+                             out_shardings=(st_sh, None),
+                             donate_argnums=(0,))
+
+        def sharded_step(state, batch):
+            with sharding_context(mesh, rules):
+                return jitted(state, batch)
+        run_step = sharded_step
+    else:
+        run_step = jax.jit(step_fn, donate_argnums=(0,))
+
+    ckpt = CheckpointManager(args.ckpt_dir, keep_last=3)
+    state, history = run_with(init_fn, run_step, stream, ckpt, args, st_sh)
+    print(f"done: step={int(state['step'])} "
+          f"final loss={history[-1]['loss'] if history else float('nan'):.4f}")
+    return state, history
+
+
+def run_with(init_fn, step_fn, stream, ckpt, args, st_sh):
+    from repro.train.fault import run_training
+    return run_training(
+        init_state_fn=init_fn,
+        train_step=step_fn,
+        stream=stream,
+        ckpt=ckpt,
+        num_steps=args.steps,
+        ckpt_every=args.ckpt_every,
+        state_shardings=st_sh,
+        injector=FaultInjector(tuple(args.fail_at)) if args.fail_at else None,
+        watchdog=Watchdog(),
+    )
+
+
+if __name__ == "__main__":
+    main()

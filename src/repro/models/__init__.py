@@ -1,0 +1,18 @@
+"""Model zoo: the 10 assigned architectures as composable JAX modules.
+
+transformer.py — decoder-only LMs (dense + MoE + multimodal prefix stubs)
+encdec.py      — encoder-decoder (SeamlessM4T backbone)
+ssm.py         — Mamba-2 (SSD chunked scan)
+griffin.py     — RecurrentGemma (RG-LRU + local attention hybrid)
+
+Every model exposes:  init_params(rng, cfg), forward(params, batch, cfg),
+and the family-appropriate decode path via models/api.py dispatch.
+"""
+
+from repro.models.api import (
+    init_params, forward, init_cache, prefill, decode_step, loss_fn,
+)
+
+__all__ = [
+    "init_params", "forward", "init_cache", "prefill", "decode_step", "loss_fn",
+]

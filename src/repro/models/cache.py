@@ -1,0 +1,94 @@
+"""Decode-time state pytrees: KV caches, ring buffers, SSM/RG-LRU states.
+
+Conventions:
+  * caches are stacked along a leading layer dim L and scanned together
+    with the stacked params (keeps decode HLO O(1) in depth);
+  * KV caches store bf16 (fp32 accumulation happens in attention);
+  * sliding-window layers use a RING buffer of exactly `window` slots —
+    a 512k-context decode with a 2k local window holds 2k keys, which is
+    what makes long_500k runnable for the hybrid archs;
+  * `len` is a scalar int32: number of tokens already written (= absolute
+    position of the next token).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Sentinel absolute position for never-written ring slots: larger than any
+# real position, so causal masking (pos_kv <= pos_q) hides them.
+EMPTY_SLOT: int = 2**30
+
+
+def kv_cache(num_layers: int, batch: int, max_len: int, num_kv_heads: int,
+             head_dim: int, dtype=jnp.bfloat16) -> dict:
+    """Standard (non-ring) KV cache for full-attention layers."""
+    shape = (num_layers, batch, max_len, num_kv_heads, head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def ring_kv_cache(num_layers: int, batch: int, window: int, num_kv_heads: int,
+                  head_dim: int, dtype=jnp.bfloat16) -> dict:
+    """Ring-buffer KV cache for sliding-window layers.
+
+    Slot for absolute position p is p % window; `pos` tracks absolute
+    positions per slot so attention can mask stale/empty slots exactly.
+    """
+    shape = (num_layers, batch, window, num_kv_heads, head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        # absolute position stored in each slot; EMPTY (a huge sentinel)
+        # fails the causal test pos_kv <= pos_q, masking unwritten slots.
+        "pos": jnp.full((num_layers, batch, window), EMPTY_SLOT, jnp.int32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def ring_update(layer_cache: dict, k: jnp.ndarray, v: jnp.ndarray,
+                start: jnp.ndarray) -> dict:
+    """Write S new steps into a single layer's ring cache (no leading L).
+
+    k, v: (B, S, Hkv, D); start: scalar absolute position of k[:, 0].
+    S must be <= window.  Returns the updated layer cache dict (without
+    'len', which the caller advances once for all layers).
+    """
+    b, s, hkv, d = k.shape
+    window = layer_cache["k"].shape[1]
+    slots = (start + jnp.arange(s)) % window                  # (S,)
+    ck = layer_cache["k"].at[:, slots].set(k.astype(layer_cache["k"].dtype))
+    cv = layer_cache["v"].at[:, slots].set(v.astype(layer_cache["v"].dtype))
+    pos = layer_cache["pos"].at[:, slots].set(
+        jnp.broadcast_to(start + jnp.arange(s), (b, s))
+    )
+    return {"k": ck, "v": cv, "pos": pos}
+
+
+def ssm_state(num_layers: int, batch: int, num_heads: int, head_dim: int,
+              state: int, conv_channels: int, conv_kernel: int,
+              dtype=jnp.float32) -> dict:
+    """Mamba-2 decode state: SSD state + causal-conv tail."""
+    return {
+        "h": jnp.zeros((num_layers, batch, num_heads, head_dim, state), dtype),
+        "conv": jnp.zeros((num_layers, batch, conv_kernel - 1, conv_channels),
+                          dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def rglru_state(num_layers: int, batch: int, width: int,
+                conv_kernel: int, dtype=jnp.float32) -> dict:
+    """RG-LRU decode state: hidden vector + conv tail (per recurrent layer)."""
+    return {
+        "h": jnp.zeros((num_layers, batch, width), dtype),
+        "conv": jnp.zeros((num_layers, batch, conv_kernel - 1, width), dtype),
+    }
+
+
+def cache_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))

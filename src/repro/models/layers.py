@@ -1,0 +1,440 @@
+"""Shared neural-net layers for the model zoo (pure JAX, no flax).
+
+Conventions:
+  * params are nested dicts of jnp arrays; stacked-layer params carry a
+    leading L dim and are consumed via lax.scan (keeps HLO size O(1) in
+    depth — essential for the 61-layer / 1T-param dry-runs).
+  * activations compute in cfg.dtype (bf16 default); norms/softmax in fp32.
+  * attention is GQA-general: Hq query heads share Hkv kv heads; kv is
+    never materialized repeated.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import constrain
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, in_axis=-2, dtype=jnp.float32):
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.maximum(fan_in, 1)).astype(jnp.float32)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Layer-stack execution: lax.scan (compact HLO) or unrolled (countable HLO)
+# ---------------------------------------------------------------------------
+def scan_or_unroll(body, carry, xs, use_scan: bool):
+    """lax.scan when use_scan, else an unrolled python loop with identical
+    semantics (body(carry, x_slice) -> (carry, y_slice); ys stacked).
+
+    Unrolling exists for the dry-run cost measurement: HloCostAnalysis
+    does not multiply while-loop bodies by trip count, so per-layer
+    FLOPs/bytes/collectives are only countable in unrolled form.
+    """
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda t: t[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *ts: jnp.stack(ts), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Mixed precision: fp32 master params, compute-dtype working copy
+# ---------------------------------------------------------------------------
+# Leaves that must stay fp32 regardless of compute dtype: router logits,
+# SSD decay rates and step biases, RG-LRU gate parameters.
+_FP32_LEAVES = frozenset(
+    {"router", "A_log", "D", "dt_bias", "lam", "g_a", "b_a", "g_x", "b_x"}
+)
+
+
+def cast_params(params, dtype):
+    """Cast float params to the compute dtype, except numerics-critical
+    leaves (kept fp32).  Integer leaves pass through."""
+
+    def f(path, x):
+        leaf = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if leaf in _FP32_LEAVES or not jnp.issubdtype(x.dtype, jnp.floating):
+            return x
+        return x.astype(dtype)
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm(x, p: dict, eps: float, use_layer_norm: bool):
+    if use_layer_norm:
+        return layer_norm(x, p["scale"], p["bias"], eps)
+    return rms_norm(x, p["scale"], eps)
+
+
+def norm_params(d: int, use_layer_norm: bool, dtype=jnp.float32) -> dict:
+    p = {"scale": jnp.zeros((d,), dtype)}
+    if use_layer_norm:
+        p = {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (B, S, H, D); positions: (B, S) or (S,). Rotate-half convention."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freq  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA / MHA, causal / bidirectional / sliding / cross)
+# ---------------------------------------------------------------------------
+def _expand_kv_for_tp(q, k, v):
+    """Under a sharding context, materialize KV per q-head group.
+
+    The memory-lean grouped form reshapes Hq -> (Hkv, G), which GSPMD
+    cannot keep head-sharded when Hkv < |model| (it replicates — measured
+    34 GiB of fp32 scores per device for llama3 train_4k).  Repeating KV
+    to Hq heads keeps the head axis TP-shardable end-to-end; the repeat
+    itself is bytes-cheap (Hq x hd per token) next to the scores it saves.
+    Outside a mesh context the grouped form is used unchanged.
+    """
+    from repro.sharding.rules import current_context
+
+    ctx = current_context()
+    if ctx is None:
+        return q, k, v
+    g = q.shape[2] // k.shape[2]
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    q = constrain(q, "batch", None, "tp", None)
+    if (ctx.rules.decode_cache_layout == "seq"
+            and q.shape[1] == 1 and k.shape[1] > 1):
+        # flash-decode: keep the cache SEQUENCE-sharded; softmax over the
+        # sharded KV axis partitions into per-shard partials + small psum
+        # combines (GSPMD derives it from jnp max/sum/einsum).
+        k = constrain(k, "batch", "tp", None, None)
+        v = constrain(v, "batch", "tp", None, None)
+    else:
+        k = constrain(k, "batch", None, "tp", None)
+        v = constrain(v, "batch", None, "tp", None)
+    return q, k, v
+
+
+def attention_chunked(
+    q: jnp.ndarray,             # (B, Sq, Hq, D)
+    k: jnp.ndarray,             # (B, Skv, Hkv, D)
+    v: jnp.ndarray,             # (B, Skv, Hkv, D)
+    *,
+    positions_q: jnp.ndarray,
+    positions_kv: jnp.ndarray,
+    causal: bool = True,
+    sliding_window: int | None = None,
+    kv_valid_len: jnp.ndarray | None = None,
+    block_kv: int = 1024,
+) -> jnp.ndarray:
+    """Online-softmax attention, KV consumed in blocks via lax.scan.
+
+    Memory is O(Sq * block_kv) instead of O(Sq * Skv) — the jnp statement
+    of FlashAttention, and the long-context prefill path.  Numerics: fp32
+    running (max, sum, acc); exact (not approximate) softmax.
+    """
+    q, k, v = _expand_kv_for_tp(q, k, v)
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if skv % block_kv:
+        pad = (-skv) % block_kv
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        positions_kv = jnp.pad(positions_kv, ((0, 0), (0, pad)),
+                               constant_values=jnp.iinfo(jnp.int32).max)
+        skv += pad
+    nblk = skv // block_kv
+    qg = q.reshape(b, sq, hkv, g, d)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    kb = k.reshape(b, nblk, block_kv, hkv, d).swapaxes(0, 1)
+    vb = v.reshape(b, nblk, block_kv, hkv, d).swapaxes(0, 1)
+    pb = positions_kv.reshape(b, nblk, block_kv).swapaxes(0, 1)
+
+    def step(carry, blk):
+        m, l, acc = carry                       # (B,K,G,Sq), same, (B,K,G,Sq,D)
+        kblk, vblk, pkv = blk
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        pqx = positions_q[:, None, None, :, None]
+        pkx = pkv[:, None, None, None, :]
+        mask = jnp.ones(s.shape, dtype=bool)
+        if causal:
+            mask &= pkx <= pqx
+        if sliding_window is not None:
+            mask &= pqx - pkx < sliding_window
+        if kv_valid_len is not None:
+            mask &= pkx < kv_valid_len[:, None, None, None, None]
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (m_new == -inf): scale-factor 0
+        alpha = jnp.where(jnp.isinf(m_new), 0.0, jnp.exp(m - m_new))
+        p = jnp.where(jnp.isinf(m_new[..., None]), 0.0,
+                      jnp.exp(s - m_new[..., None]))
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, hq, d)
+    return out.astype(q.dtype)
+
+
+def attention(
+    q: jnp.ndarray,             # (B, Sq, Hq, D)
+    k: jnp.ndarray,             # (B, Skv, Hkv, D)
+    v: jnp.ndarray,             # (B, Skv, Hkv, D)
+    *,
+    positions_q: jnp.ndarray,   # (B, Sq) absolute positions
+    positions_kv: jnp.ndarray,  # (B, Skv)
+    causal: bool = True,
+    sliding_window: int | None = None,
+    kv_valid_len: jnp.ndarray | None = None,  # (B,) valid cache length
+) -> jnp.ndarray:
+    q, k, v = _expand_kv_for_tp(q, k, v)
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+
+    scores = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg, k, preferred_element_type=jnp.float32
+    ) / jnp.sqrt(d).astype(jnp.float32)
+
+    # mask from absolute positions (works for full, prefill and decode)
+    pq = positions_q[:, None, None, :, None]        # (B,1,1,Sq,1)
+    pkv = positions_kv[:, None, None, None, :]      # (B,1,1,1,Skv)
+    mask = jnp.ones((b, 1, 1, sq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= pkv <= pq
+    if sliding_window is not None:
+        mask &= pq - pkv < sliding_window
+    if kv_valid_len is not None:
+        mask &= pkv < kv_valid_len[:, None, None, None, None]
+
+    scores = jnp.where(mask, scores, -1e30)
+    weights = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", weights, v)
+    return out.reshape(b, sq, hq, d)
+
+
+def attention_block(
+    x: jnp.ndarray,            # (B, S, d_model)
+    p: dict,                   # wq, wk, wv, wo (+ biases, q/k norms)
+    cfg,
+    *,
+    positions: jnp.ndarray,
+    causal: bool = True,
+    sliding_window=None,
+    cache: dict | None = None,           # {"k","v","len"} for decode
+    kv_source: jnp.ndarray | None = None,  # cross-attention memory
+):
+    """Full attention sub-block: projections + rope + attn + out-proj.
+
+    Returns (out, updated_cache).
+    """
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    kv_in = x if kv_source is None else kv_source
+    k = jnp.einsum("bsd,dhe->bshe", kv_in, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", kv_in, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    use_rope = kv_source is None  # no rope on cross-attention memory
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+
+    if cache is not None and "pos" in cache:
+        # ring-buffer cache (sliding-window layers): slot = pos % window
+        from repro.models.cache import ring_update
+
+        if use_rope:
+            k = apply_rope(k, positions, cfg.rope_theta)
+        window = cache["k"].shape[1]
+        if s == 1:
+            upd = ring_update(cache, k, v, cache["len"])
+            out = attention(
+                q, upd["k"], upd["v"],
+                positions_q=positions, positions_kv=upd["pos"], causal=True,
+                sliding_window=sliding_window,
+            )
+        else:
+            # prefill: attend over the full (windowed) sequence, then store
+            # only the last `window` keys in the ring.
+            out = attention(
+                q, k, v, positions_q=positions, positions_kv=positions,
+                causal=True, sliding_window=sliding_window,
+            )
+            keep = min(s, window)
+            upd = ring_update(
+                cache, k[:, -keep:], v[:, -keep:],
+                cache["len"] + s - keep,
+            )
+        new_cache = {**upd, "len": cache["len"] + s}
+    elif cache is not None:
+        # decode: write new k/v at position cache["len"], attend over cache
+        if use_rope:
+            k = apply_rope(k, positions, cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache["len"], axis=1
+        )
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache["len"], axis=1
+        )
+        skv = ck.shape[1]
+        pos_kv = jnp.broadcast_to(jnp.arange(skv)[None, :], (b, skv))
+        valid = jnp.full((b,), cache["len"] + s, jnp.int32)
+        # long prefill into a cache: online-softmax path (dense S x S
+        # scores at 32k would be ~17 GiB/device)
+        use_chunked = s > 1 and skv >= getattr(cfg, "flash_min_seq", 8192)
+        attn_fn = attention_chunked if use_chunked else attention
+        kw = {"block_kv": cfg.attn_block_kv} if use_chunked else {}
+        out = attn_fn(
+            q, ck, cv,
+            positions_q=positions, positions_kv=pos_kv, causal=causal,
+            sliding_window=sliding_window, kv_valid_len=valid, **kw,
+        )
+        new_cache = {"k": ck, "v": cv, "len": cache["len"] + s}
+    else:
+        if use_rope:
+            kv_pos = positions
+            k = apply_rope(k, kv_pos, cfg.rope_theta)
+        else:
+            kv_pos = jnp.broadcast_to(
+                jnp.arange(kv_in.shape[1])[None, :], (b, kv_in.shape[1])
+            )
+        use_chunked = (
+            s >= getattr(cfg, "flash_min_seq", 8192)
+            and k.shape[1] >= getattr(cfg, "flash_min_seq", 8192)
+        )
+        attn_fn = attention_chunked if use_chunked else attention
+        kw = {"block_kv": cfg.attn_block_kv} if use_chunked else {}
+        out = attn_fn(
+            q, k, v,
+            positions_q=positions, positions_kv=kv_pos,
+            causal=causal and kv_source is None,
+            sliding_window=sliding_window, **kw,
+        )
+        new_cache = None
+
+    out = constrain(out, "batch", None, "tp", None)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"]), new_cache
+
+
+def attention_params(key, cfg, d_model=None, dtype=jnp.float32) -> dict:
+    d = d_model or cfg.d_model
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, hq, hd), in_axis=0, dtype=dtype),
+        "wk": dense_init(ks[1], (d, hkv, hd), in_axis=0, dtype=dtype),
+        "wv": dense_init(ks[2], (d, hkv, hd), in_axis=0, dtype=dtype),
+        "wo": dense_init(ks[3], (hq, hd, d), in_axis=1, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq, hd), dtype)
+        p["bk"] = jnp.zeros((hkv, hd), dtype)
+        p["bv"] = jnp.zeros((hkv, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def swiglu(x: jnp.ndarray, p: dict) -> jnp.ndarray:
+    gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    h = constrain(h, "batch", None, "tp")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+def geglu(x: jnp.ndarray, p: dict) -> jnp.ndarray:
+    gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    h = constrain(h, "batch", None, "tp")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+def mlp_params(key, d: int, f: int, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, f), in_axis=0, dtype=dtype),
+        "w_up": dense_init(ks[1], (d, f), in_axis=0, dtype=dtype),
+        "w_down": dense_init(ks[2], (f, d), in_axis=0, dtype=dtype),
+    }
+
+
+def softcap(logits: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap <= 0:
+        return logits
+    return cap * jnp.tanh(logits / cap)

@@ -1,0 +1,199 @@
+"""Decoder-only LM: dense, MoE and multimodal-prefix variants.
+
+Covers 7 of the 10 assigned archs (qwen2/2.5/3, llama3, llama4-scout,
+kimi-k2, llava-next backbone).  Layers are stacked per *segment* (uniform
+runs of identical blocks — e.g. kimi-k2 = 1 dense layer + 60 MoE layers)
+and consumed with lax.scan so HLO size is O(segments), not O(depth):
+a 61-layer 1T-param train_step lowers to the same module size as a 2-layer
+toy.  Decode scans (params, kv-cache) jointly and emits the new cache.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.moe import moe_block, moe_params
+from repro.sharding.rules import constrain
+
+
+# ---------------------------------------------------------------------------
+# Segments: uniform runs of identical blocks, each scanned.
+# ---------------------------------------------------------------------------
+def segments_spec(cfg) -> tuple[tuple[str, int], ...]:
+    """((kind, num_layers), ...) with kind in {"dense", "moe"}."""
+    if cfg.is_moe:
+        segs = []
+        if cfg.first_k_dense:
+            segs.append(("dense", cfg.first_k_dense))
+        segs.append(("moe", cfg.num_layers - cfg.first_k_dense))
+        return tuple(segs)
+    return (("dense", cfg.num_layers),)
+
+
+def _layer_params(key, cfg, kind: str, dtype) -> dict:
+    k_attn, k_ffn = jax.random.split(key)
+    d = cfg.d_model
+    p = {
+        "attn_norm": L.norm_params(d, cfg.use_layer_norm, dtype),
+        "attn": L.attention_params(k_attn, cfg, dtype=dtype),
+        "mlp_norm": L.norm_params(d, cfg.use_layer_norm, dtype),
+    }
+    if kind == "moe":
+        p["moe"] = moe_params(k_ffn, cfg, dtype=dtype)
+    else:
+        p["mlp"] = L.mlp_params(k_ffn, d, cfg.d_ff, dtype=dtype)
+    return p
+
+
+def _stack_init(fn, key, n: int):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(key, cfg, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, 4 + len(segments_spec(cfg)))
+    d, v = cfg.d_model, cfg.padded_vocab
+    params = {
+        "embed": L.embed_init(keys[0], (v, d), dtype),
+        "final_norm": L.norm_params(d, cfg.use_layer_norm, dtype),
+        "segments": {},
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[1], (d, v), in_axis=0, dtype=dtype)
+    for i, (kind, n) in enumerate(segments_spec(cfg)):
+        params["segments"][f"seg{i}"] = {
+            "layers": _stack_init(
+                lambda k, kind=kind: _layer_params(k, cfg, kind, dtype),
+                keys[3 + i], n,
+            )
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+def _block(x, p, cfg, kind, *, positions, cache_layer=None):
+    """One transformer block. Returns (x, new_cache_layer, aux_loss)."""
+    h = L.norm(x, p["attn_norm"], cfg.norm_eps, cfg.use_layer_norm)
+    h, new_cache = L.attention_block(
+        h, p["attn"], cfg, positions=positions, causal=True,
+        sliding_window=cfg.sliding_window, cache=cache_layer,
+    )
+    x = x + h
+    h = L.norm(x, p["mlp_norm"], cfg.norm_eps, cfg.use_layer_norm)
+    if kind == "moe":
+        h, aux = moe_block(h, p["moe"], cfg)
+    else:
+        h, aux = L.swiglu(h, p["mlp"]), jnp.zeros((), jnp.float32)
+    x = x + h
+    x = constrain(x, "batch", None, None)
+    return x, new_cache, aux
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+def _run_segment(x, seg_params, cfg, kind, *, positions, seg_cache=None):
+    """Scan a uniform segment of layers. Returns (x, new_seg_cache, aux)."""
+    stacked = seg_params["layers"]
+
+    if seg_cache is None:
+        def body(carry, p_layer):
+            h, aux = carry
+            h, _, a = _block(h, p_layer, cfg, kind, positions=positions)
+            return (h, aux + a), None
+        body = _remat(body, cfg) if cfg.remat != "none" else body
+        (x, aux), _ = L.scan_or_unroll(
+            body, (x, jnp.zeros((), jnp.float32)), stacked, cfg.scan_layers)
+        return x, None, aux
+
+    # decode/prefill-with-cache: scan params and cache jointly
+    def body(carry, xs):
+        h, aux = carry
+        p_layer, c_layer = xs
+        h, new_c, a = _block(h, p_layer, cfg, kind, positions=positions,
+                             cache_layer=c_layer)
+        return (h, aux + a), {"k": new_c["k"], "v": new_c["v"]}
+
+    kv = {"k": seg_cache["k"], "v": seg_cache["v"]}
+    # per-layer cache view must carry the shared scalar len
+    ln = seg_cache["len"]
+    def body_with_len(carry, xs):
+        p_layer, c_kv = xs
+        return body(carry, (p_layer, {"k": c_kv["k"], "v": c_kv["v"],
+                                      "len": ln}))
+    (x, aux), new_kv = L.scan_or_unroll(
+        body_with_len, (x, jnp.zeros((), jnp.float32)), (stacked, kv),
+        cfg.scan_layers)
+    s = positions.shape[-1]
+    new_cache = {"k": new_kv["k"], "v": new_kv["v"], "len": ln + s}
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def forward(params, tokens, cfg, *, prefix_embeds=None, cache=None,
+            positions=None):
+    """tokens: (B, S) int32. prefix_embeds: (B, P, d) for VLM/audio stubs.
+
+    Returns (logits (B, S_total, padded_vocab), aux_loss, new_cache).
+    With a cache, S is the new-token count and positions default to
+    cache['len'] + arange(S).
+    """
+    params = L.cast_params(params, cfg.dtype)
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if cfg.scale_embeddings:
+        x = x * jnp.sqrt(cfg.d_model).astype(cfg.dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.dtype), x], axis=1)
+        s = x.shape[1]
+    if positions is None:
+        base = cache["seg0"]["len"] if cache is not None else 0
+        positions = jnp.broadcast_to(base + jnp.arange(s)[None, :], (b, s))
+    x = constrain(x, "batch", None, None)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache = {}
+    for i, (kind, _) in enumerate(segments_spec(cfg)):
+        seg_cache = cache[f"seg{i}"] if cache is not None else None
+        x, seg_new, aux = _run_segment(
+            x, params["segments"][f"seg{i}"], cfg, kind,
+            positions=positions, seg_cache=seg_cache,
+        )
+        aux_total = aux_total + aux
+        if seg_new is not None:
+            new_cache[f"seg{i}"] = seg_new
+
+    x = L.norm(x, params["final_norm"], cfg.norm_eps, cfg.use_layer_norm)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embed"].astype(cfg.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["lm_head"].astype(cfg.dtype))
+    logits = L.softcap(logits.astype(jnp.float32), cfg.logits_softcap)
+    logits = constrain(logits, "batch", None, "tp")
+    return logits, aux_total, (new_cache if cache is not None else None)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    from repro.models.cache import kv_cache
+
+    c = {}
+    for i, (kind, n) in enumerate(segments_spec(cfg)):
+        ln = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        c[f"seg{i}"] = kv_cache(n, batch, ln, cfg.num_kv_heads, cfg.head_dim,
+                                dtype)
+    return c

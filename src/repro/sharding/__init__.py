@@ -1,0 +1,13 @@
+from repro.sharding.rules import (
+    ShardingRules,
+    cache_shardings,
+    constrain,
+    param_shardings,
+    sharding_context,
+    current_context,
+)
+
+__all__ = [
+    "ShardingRules", "cache_shardings", "constrain", "param_shardings",
+    "sharding_context", "current_context",
+]

@@ -1,0 +1,259 @@
+"""Logical-axis sharding rules (MaxText-style) for the model zoo.
+
+Mesh axes (v5e): ``("data", "model")`` single-pod, ``("pod", "data",
+"model")`` multi-pod.  Logical activation/parameter axes map to mesh axes:
+
+  batch    -> ("pod", "data")     activations: pure DP
+  fsdp     -> ("data",)           parameters: ZeRO-3 shard of a non-TP dim
+  tp       -> ("model",)          parameters: tensor-parallel dim
+  experts  -> ("model",)          MoE expert-parallel dim
+
+Head-count quirk: TP over attention heads requires heads % |model| == 0
+(true for llama3/qwen3/seamless/griffin, false for llama4-scout's 40 and
+qwen2-1.5b's 12).  ``attn_tp_dim`` picks heads when divisible, else falls
+back to sharding head_dim (always 128, divisible by 16) — DESIGN.md §5.
+
+``constrain`` is a no-op outside a sharding_context, so model code runs
+unmodified on a single CPU device (smoke tests) and sharded under jit.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    batch_axes: tuple = ("pod", "data")
+    fsdp_axes: tuple = ("data",)
+    tp_axes: tuple = ("model",)
+    expert_axes: tuple = ("model",)
+    shard_heads: bool = True     # False -> head_dim fallback for attention
+    # Decode KV-cache layout: "heads" (baseline: heads, else head_dim, on
+    # the model axis) or "seq" (flash-decode: sequence dim on the model
+    # axis — partial softmax per shard, small psum combines; see §Perf).
+    decode_cache_layout: str = "heads"
+
+    def present(self, mesh: Mesh, axes: tuple) -> tuple:
+        return tuple(a for a in axes if a in mesh.axis_names)
+
+
+_TLS = threading.local()
+
+
+@dataclasses.dataclass
+class _Ctx:
+    mesh: Mesh
+    rules: ShardingRules
+
+
+def current_context() -> Optional[_Ctx]:
+    return getattr(_TLS, "ctx", None)
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh, rules: ShardingRules = ShardingRules()):
+    prev = current_context()
+    _TLS.ctx = _Ctx(mesh, rules)
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def _axis_size(mesh: Mesh, axes: tuple) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain(x: jax.Array, *logical) -> jax.Array:
+    """with_sharding_constraint by logical axis names; identity if no ctx.
+
+    ``logical`` entries: "batch" | "tp" | "fsdp" | "experts" | None.
+    Axes whose size does not divide the mesh extent are left unsharded.
+    """
+    ctx = current_context()
+    if ctx is None:
+        return x
+    mesh, rules = ctx.mesh, ctx.rules
+    name_map = {
+        "batch": rules.present(mesh, rules.batch_axes),
+        "fsdp": rules.present(mesh, rules.fsdp_axes),
+        "tp": rules.present(mesh, rules.tp_axes),
+        "experts": rules.present(mesh, rules.expert_axes),
+    }
+    spec = []
+    for dim, l in enumerate(logical):
+        axes = name_map.get(l) if l else None
+        if axes and x.shape[dim] % _axis_size(mesh, axes) == 0:
+            spec.append(axes if len(axes) > 1 else axes[0])
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode-cache shardings (baseline layout)
+# ---------------------------------------------------------------------------
+def cache_shardings(cache_shape, mesh: Mesh,
+                    rules: ShardingRules = ShardingRules()):
+    """Decode-state shardings (baseline layout).
+
+    KV caches (L, B, S, H, hd): batch over DP axes; heads over `model`
+    when divisible, else head_dim over `model` (the GQA fallback — e.g.
+    llama3's kv=8 on a 16-way model axis).  The sequence dim is NOT
+    sharded in the baseline; the flash-decode hillclimb (§Perf) moves the
+    shard there.  SSM/RG-LRU states shard batch + channel dims.
+    """
+    batch = rules.present(mesh, rules.batch_axes)
+    tp = rules.present(mesh, rules.tp_axes)
+    b_n = _axis_size(mesh, batch) if batch else 1
+    tp_n = _axis_size(mesh, tp) if tp else 1
+    b_ax = batch if len(batch) > 1 else (batch[0] if batch else None)
+    tp_ax = tp if len(tp) > 1 else (tp[0] if tp else None)
+
+    def ok(n, d):
+        return d > 1 and n % d == 0
+
+    def visit(path_parts, node):
+        if isinstance(node, dict):
+            return {k: visit(path_parts + (k,), v) for k, v in node.items()}
+        leaf = path_parts[-1]
+        shape = node.shape
+        spec = [None] * len(shape)
+        if len(shape) == 0:                      # scalars ("len")
+            return NamedSharding(mesh, P())
+        if leaf in ("k", "v", "cross_k", "cross_v") and len(shape) == 5:
+            # (L, B, S, H, hd)
+            if ok(shape[1], b_n):
+                spec[1] = b_ax
+            if rules.decode_cache_layout == "seq" and ok(shape[2], tp_n):
+                spec[2] = tp_ax        # flash-decode: shard the sequence
+            elif ok(shape[3], tp_n):
+                spec[3] = tp_ax
+            elif ok(shape[4], tp_n):
+                spec[4] = tp_ax
+        elif leaf == "pos" and len(shape) == 3:   # (L, B, W)
+            if ok(shape[1], b_n):
+                spec[1] = b_ax
+        elif leaf == "h" and len(shape) == 5:     # SSD state (L,B,H,P,N)
+            if ok(shape[1], b_n):
+                spec[1] = b_ax
+            if ok(shape[2], tp_n):
+                spec[2] = tp_ax
+        elif leaf == "h" and len(shape) == 3:     # RG-LRU state (L,B,w)
+            if ok(shape[1], b_n):
+                spec[1] = b_ax
+            if ok(shape[2], tp_n):
+                spec[2] = tp_ax
+        elif leaf == "conv" and len(shape) == 4:  # (L, B, K-1, C)
+            if ok(shape[1], b_n):
+                spec[1] = b_ax
+            if ok(shape[3], tp_n):
+                spec[3] = tp_ax
+        return NamedSharding(mesh, P(*spec))
+
+    return visit((), cache_shape)
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings: map param-tree paths to PartitionSpecs.
+# ---------------------------------------------------------------------------
+
+def _spec_for(path: str, shape: tuple, mesh: Mesh, rules: ShardingRules) -> P:
+    """Choose a spec for one parameter.
+
+    Convention (see models/*.py init functions):
+      stacked layer dim (leading, name contains 'layers') is never sharded;
+      TP goes on the 'wide' dim (ff / heads / experts / vocab);
+      FSDP goes on the d_model ('embed') dim when divisible.
+    """
+    tp = rules.present(mesh, rules.tp_axes)
+    fsdp = rules.present(mesh, rules.fsdp_axes)
+    ep = rules.present(mesh, rules.expert_axes)
+    tp_n = _axis_size(mesh, tp) if tp else 1
+    fsdp_n = _axis_size(mesh, fsdp) if fsdp else 1
+    ep_n = _axis_size(mesh, ep) if ep else 1
+
+    def ok(dim_size, n):
+        return n > 1 and dim_size % n == 0
+
+    leaf = path.split("/")[-1]
+    spec = [None] * len(shape)
+    stacked = path.startswith("layers") or "/layers/" in path or "blocks" in path
+
+    def dim0() -> int:
+        return 1 if stacked else 0
+
+    if leaf in ("embed", "unembed", "lm_head"):
+        # (vocab, d) or (d, vocab): TP on vocab, FSDP on d_model
+        vdim = 0 if shape[0] > shape[-1] else len(shape) - 1
+        ddim = len(shape) - 1 - vdim if len(shape) == 2 else None
+        if ok(shape[vdim], tp_n):
+            spec[vdim] = tp if len(tp) > 1 else tp[0]
+        if ddim is not None and ok(shape[ddim], fsdp_n):
+            spec[ddim] = fsdp if len(fsdp) > 1 else fsdp[0]
+    elif leaf.startswith("we_") or leaf == "router":
+        # MoE: we_* (L, E, d, f)/(L, E, f, d) -> experts on E, FSDP on d
+        if leaf == "router":
+            d_dim = dim0()
+            if ok(shape[d_dim], fsdp_n):
+                spec[d_dim] = fsdp if len(fsdp) > 1 else fsdp[0]
+        else:
+            e_dim = dim0()
+            if ok(shape[e_dim], ep_n):
+                spec[e_dim] = ep if len(ep) > 1 else ep[0]
+            # FSDP on whichever of the two trailing dims == d_model-like (larger)
+            d_dim = e_dim + 1 if shape[e_dim + 1] >= shape[e_dim + 2] else e_dim + 2
+            if ok(shape[d_dim], fsdp_n):
+                spec[d_dim] = fsdp if len(fsdp) > 1 else fsdp[0]
+    elif leaf in ("wq", "wk", "wv", "wo", "w_qkv"):
+        # (L, d, H, hd) or (L, H, hd, d): TP on heads if divisible else hd
+        hd_dim = len(shape) - 2 if leaf != "wo" else dim0() + 1
+        h_dim = hd_dim - 1 if leaf != "wo" else dim0()
+        d_dim = len(shape) - 1 if leaf == "wo" else dim0()
+        if rules.shard_heads and ok(shape[h_dim], tp_n):
+            spec[h_dim] = tp if len(tp) > 1 else tp[0]
+        elif ok(shape[hd_dim], tp_n):
+            spec[hd_dim] = tp if len(tp) > 1 else tp[0]
+        if ok(shape[d_dim], fsdp_n):
+            spec[d_dim] = fsdp if len(fsdp) > 1 else fsdp[0]
+    elif leaf in ("w_gate", "w_up", "w_in", "w_branch_x", "w_branch_gate",
+                  "w_xbc_dt", "in_proj"):
+        # (L, d, f): TP on f, FSDP on d
+        if ok(shape[-1], tp_n):
+            spec[-1] = tp if len(tp) > 1 else tp[0]
+        if ok(shape[-2], fsdp_n):
+            spec[-2] = fsdp if len(fsdp) > 1 else fsdp[0]
+    elif leaf in ("w_down", "w_out", "out_proj"):
+        # (L, f, d): TP on f, FSDP on d
+        if ok(shape[-2], tp_n):
+            spec[-2] = tp if len(tp) > 1 else tp[0]
+        if ok(shape[-1], fsdp_n):
+            spec[-1] = fsdp if len(fsdp) > 1 else fsdp[0]
+    # 1-D (norms, biases, gates) and anything unmatched stays replicated.
+    return P(*spec)
+
+
+def param_shardings(params_shape, mesh: Mesh,
+                    rules: ShardingRules = ShardingRules()):
+    """Tree of NamedShardings matching a tree of param ShapeDtypeStructs."""
+
+    def visit(path_parts, node):
+        if isinstance(node, dict):
+            return {k: visit(path_parts + (k,), v) for k, v in node.items()}
+        path = "/".join(path_parts)
+        spec = _spec_for(path, node.shape, mesh, rules)
+        return NamedSharding(mesh, spec)
+
+    return visit((), params_shape)

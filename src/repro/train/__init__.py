@@ -1,0 +1,16 @@
+"""Training substrate: optimizers, grad machinery, steps, checkpoint, fault."""
+
+from repro.train.optimizer import OPTIMIZERS, adamw, adafactor, warmup_cosine
+from repro.train.train_step import (
+    init_state, make_optimizer, make_train_step, state_shardings,
+    batch_shardings,
+)
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault import FaultInjector, Watchdog, run_training
+
+__all__ = [
+    "OPTIMIZERS", "adamw", "adafactor", "warmup_cosine",
+    "init_state", "make_optimizer", "make_train_step", "state_shardings",
+    "batch_shardings", "CheckpointManager", "FaultInjector", "Watchdog",
+    "run_training",
+]

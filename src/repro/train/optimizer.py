@@ -1,0 +1,143 @@
+"""Hand-rolled optimizers (no optax): AdamW and Adafactor.
+
+Optimizer state pytrees mirror the param tree leaf-for-leaf, so
+`sharding/rules.param_shardings` applies verbatim to the state (ZeRO:
+moments inherit the FSDP/TP sharding of their parameter).
+
+All moment math is fp32 regardless of param dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * (step + 1) / max(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) /
+                     max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr
+
+
+def constant_lr(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer interface
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable     # params -> opt_state
+    update: Callable   # (grads, opt_state, params, step) -> (new_params, new_state)
+
+
+def adamw(lr: Callable | float, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    lr_fn = lr if callable(lr) else constant_lr(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        t = (step + 1).astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            mhat = mu / bc1
+            nhat = nu / bc2
+            step_ = mhat / (jnp.sqrt(nhat) + eps)
+            if weight_decay and p.ndim >= 2:   # no decay on norms/biases
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr_t * step_
+            return new_p.astype(p.dtype), mu, nu
+
+        flat = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        new_params = jax.tree.map(lambda t3: t3[0], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda t3: t3[1], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda t3: t3[2], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"mu": new_mu, "nu": new_nu}
+
+    return Optimizer(init=init, update=update)
+
+
+def adafactor(lr: Callable | float, eps: float = 1e-30,
+              decay: float = 0.8, weight_decay: float = 0.0,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second moments for >=2-D params: O(n+m) state instead of
+    O(nm) — the memory-saving option for the 1T-param cells."""
+    lr_fn = lr if callable(lr) else constant_lr(lr)
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+    def init(params):
+        def leaf(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree.map(leaf, params)
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        t = (step + 1).astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = vr / jnp.maximum(
+                    jnp.mean(vr, axis=-1, keepdims=True), eps)
+                u = g / (jnp.sqrt(rfac)[..., None] * jnp.sqrt(vc)[..., None, :]
+                         + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g / (jnp.sqrt(v) + eps)
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay and p.ndim >= 2:
+                u = u + weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr_t * u
+            return new_p.astype(p.dtype), new_s
+
+        # state has one extra dict level below each grad leaf; tree.map
+        # flattens up to grads' leaves and passes the state dict whole.
+        flat = jax.tree.map(upd, grads, state, params)
+        istup = lambda x: isinstance(x, tuple)
+        new_params = jax.tree.map(lambda t2: t2[0], flat, is_leaf=istup)
+        new_state = jax.tree.map(lambda t2: t2[1], flat, is_leaf=istup)
+        return new_params, new_state
+
+    return Optimizer(init=init, update=update)
+
+
+OPTIMIZERS = {"adamw": adamw, "adafactor": adafactor}

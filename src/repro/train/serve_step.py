@@ -1,0 +1,47 @@
+"""Serving steps: batched prefill + decode with static shapes.
+
+`make_serve_fns(cfg)` returns (prefill_fn, decode_fn), both pure:
+
+  prefill_fn(params, batch, cache)          -> (next_tokens, cache)
+  decode_fn(params, tokens, cache)          -> (next_tokens, cache)
+
+Sampling is greedy (argmax) — deterministic and collective-free, which is
+what the dry-run lowers; examples/serve_lm.py layers temperature sampling
+on top.  `decode_loop` runs N steps under lax.scan for throughput.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+
+
+def make_serve_fns(cfg):
+    def prefill_fn(params, batch, cache):
+        logits, cache = api.prefill(params, batch, cfg, cache)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    def decode_fn(params, tokens, cache):
+        logits, cache = api.decode_step(params, tokens, cfg, cache)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return prefill_fn, decode_fn
+
+
+def decode_loop(params, first_tokens, cache, cfg, num_steps: int):
+    """Greedy-decode num_steps tokens under lax.scan.
+
+    Returns (tokens (B, num_steps), final_cache).
+    """
+    _, decode_fn = make_serve_fns(cfg)
+
+    def step(carry, _):
+        toks, cache = carry
+        nxt, cache = decode_fn(params, toks[:, None], cache)
+        return (nxt, cache), nxt
+
+    (_, cache), toks = jax.lax.scan(
+        step, (first_tokens, cache), None, length=num_steps)
+    return jnp.swapaxes(toks, 0, 1), cache

@@ -1,0 +1,128 @@
+"""Train step factory: loss -> grads -> clip -> (compress) -> optimizer.
+
+`make_train_step(cfg, ...)` returns (init_state, step_fn) where step_fn is
+pure and jit-friendly:  state, batch -> (state, metrics).  State is a flat
+dict pytree (params / opt / step / err) so checkpointing and
+param_shardings traverse it uniformly.
+
+Under a mesh, build shardings with `state_shardings(state_shape, mesh)`
+and jit with those as in_shardings/out_shardings (launch/train.py and
+launch/dryrun.py do this); on a single device just jit it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import api
+from repro.sharding.rules import ShardingRules, param_shardings
+from repro.train import grad as G
+from repro.train.optimizer import OPTIMIZERS, Optimizer, warmup_cosine
+
+
+def make_optimizer(cfg, *, peak_lr: float = 3e-4, warmup: int = 100,
+                   total_steps: int = 10_000) -> Optimizer:
+    sched = warmup_cosine(peak_lr, warmup, total_steps)
+    return OPTIMIZERS[cfg.optimizer](sched)
+
+
+def init_state(rng, cfg, optimizer: Optimizer, *, compress: bool = False):
+    params = api.init_params(rng, cfg)
+    state = {
+        "params": params,
+        "opt": optimizer.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if compress:
+        state["err"] = G.init_error_buffer(params)
+    return state
+
+
+def make_train_step(cfg, optimizer: Optimizer, *, clip_norm: float = 1.0,
+                    num_microbatches: int = 1, compress: bool = False):
+    """Returns step_fn(state, batch) -> (new_state, metrics)."""
+
+    def loss_fn(params, batch):
+        return api.loss_fn(params, batch, cfg)
+
+    def step_fn(state, batch):
+        loss, metrics, grads = G.accumulate_grads(
+            loss_fn, state["params"], batch, num_microbatches)
+        grads, gnorm = G.clip_by_global_norm(grads, clip_norm)
+        if compress:
+            grads, new_err = G.compress_grads(grads, state["err"])
+        new_params, new_opt = optimizer.update(
+            grads, state["opt"], state["params"], state["step"])
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+        }
+        if compress:
+            new_state["err"] = new_err
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["loss_total"] = loss
+        return new_state, metrics
+
+    return step_fn
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers
+# ---------------------------------------------------------------------------
+def state_shardings(state_shape, mesh, rules: ShardingRules = ShardingRules()):
+    """NamedShardings for a full train state (params/opt mirror; scalars
+    replicated).  state_shape: pytree of ShapeDtypeStructs (jax.eval_shape).
+    """
+    p_shard = param_shardings(state_shape["params"], mesh, rules)
+    out = {"params": p_shard, "step": NamedSharding(mesh, P())}
+
+    if "opt" in state_shape:
+        # AdamW: mu/nu mirror params exactly. Adafactor: factored moments
+        # drop the last/second-to-last dim — shard what still matches.
+        def opt_shard(opt_tree, params_shard):
+            def walk(o, ps):
+                if isinstance(o, dict) and all(
+                        k in ("mu", "nu", "v", "vr", "vc") for k in o):
+                    res = {}
+                    for k, v in o.items():
+                        res[k] = walk(v, ps)
+                    return res
+                if isinstance(o, dict) and isinstance(ps, dict):
+                    return {k: walk(v, ps.get(k)) for k, v in o.items()}
+                if isinstance(ps, NamedSharding) and hasattr(o, "shape"):
+                    if len(ps.spec) == len(o.shape):
+                        return ps
+                    # factored moment (O(n+m) state): replicate — cheap
+                    return NamedSharding(mesh, P())
+                if isinstance(o, dict):
+                    return {k: walk(v, None) for k, v in o.items()}
+                return NamedSharding(mesh, P())
+            return walk(opt_tree, params_shard)
+        out["opt"] = opt_shard(state_shape["opt"], p_shard)
+    if "err" in state_shape:
+        out["err"] = p_shard
+    return out
+
+
+def batch_shardings(batch_shape, mesh, rules: ShardingRules = ShardingRules()):
+    """Batch-dim sharding over the DP axes for every batch leaf."""
+    axes = rules.present(mesh, rules.batch_axes)
+    ax = axes if len(axes) > 1 else (axes[0] if axes else None)
+
+    def leaf(x):
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        n = 1
+        for a in (axes or ()):
+            n *= mesh.shape[a]
+        if n > 1 and x.shape[0] % n == 0:
+            return NamedSharding(mesh, P(ax, *([None] * (x.ndim - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(leaf, batch_shape)

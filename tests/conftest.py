@@ -1,0 +1,14 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on 1 CPU device;
+multi-device tests spawn subprocesses with their own flags."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,98 @@
+"""Core integral-histogram semantics: the four methods, O(1) queries,
+analytics — including the central hypothesis property (Eq. 2 == direct
+histogram for arbitrary regions)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distances, scans
+from repro.core.integral_histogram import IntegralHistogram
+from repro.core.region_query import (
+    likelihood_map, region_histogram, sliding_window_histograms,
+)
+from repro.core.tracking import FragmentTracker, TrackerConfig
+from repro.kernels.ref import integral_histogram_ref, region_histogram_ref
+
+
+@pytest.mark.parametrize("method", sorted(scans.METHODS))
+def test_methods_match_oracle(rng, method):
+    img = rng.integers(0, 256, (96, 64), dtype=np.uint8)
+    ref = integral_histogram_ref(jnp.asarray(img), 16)
+    out = scans.METHODS[method](jnp.asarray(img), 16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    r0=st.integers(0, 47), c0=st.integers(0, 63),
+    bins=st.sampled_from([4, 16]),
+)
+def test_property_region_query_eq2(seed, r0, c0, bins):
+    """Paper Eq. 2: 4-corner combination == direct region histogram."""
+    r = np.random.default_rng(seed)
+    img = r.integers(0, 256, (48, 64), dtype=np.uint8)
+    r1 = r.integers(r0, 48)
+    c1 = r.integers(c0, 64)
+    H = integral_histogram_ref(jnp.asarray(img), bins)
+    got = region_histogram(H, jnp.array([r0, c0, r1, c1]))
+    want = region_histogram_ref(jnp.asarray(img), bins, r0, c0, r1, c1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+
+
+def test_sliding_windows_all_positions(rng):
+    img = rng.integers(0, 256, (24, 30), dtype=np.uint8)
+    H = integral_histogram_ref(jnp.asarray(img), 8)
+    wins = sliding_window_histograms(H, (8, 10), stride=2)
+    assert wins.shape == ((24 - 8) // 2 + 1, (30 - 10) // 2 + 1, 8)
+    # each window histogram sums to window area
+    np.testing.assert_allclose(np.asarray(jnp.sum(wins, -1)), 80.0)
+
+
+def test_histogram_metrics_identities():
+    h = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    assert float(distances.intersection(h, h)) == pytest.approx(1.0, abs=1e-5)
+    assert float(distances.bhattacharyya(h, h)) == pytest.approx(1.0, abs=1e-2)
+    assert float(distances.chi2(h, h)) == pytest.approx(0.0, abs=1e-6)
+    g = jnp.asarray([4.0, 3.0, 2.0, 1.0])
+    assert float(distances.intersection(h, g)) < 1.0
+    assert float(distances.chi2(h, g)) > 0.0
+
+
+def test_likelihood_map_peaks_on_target(rng):
+    """A bright square on dark background: the map must peak on it."""
+    img = np.zeros((64, 64), np.uint8)
+    img[20:36, 30:46] = 250
+    H = integral_histogram_ref(jnp.asarray(img), 16)
+    target = region_histogram(H, jnp.array([20, 30, 35, 45]))
+    smap = likelihood_map(H, target, (16, 16), distances.intersection)
+    r, c = np.unravel_index(int(jnp.argmax(smap)), smap.shape)
+    assert abs(r - 20) <= 2 and abs(c - 30) <= 2
+
+
+def test_fragment_tracker_follows_blob():
+    """Tracker must follow a moving bright blob across frames."""
+    def frame(cy, cx):
+        img = (10 * np.random.default_rng(0).random((96, 96))).astype(np.uint8)
+        yy, xx = np.mgrid[0:96, 0:96]
+        blob = 220 * np.exp(-((yy - cy) ** 2 + (xx - cx) ** 2) / 60.0)
+        return np.clip(img + blob, 0, 255).astype(np.uint8)
+
+    tracker = FragmentTracker(TrackerConfig(num_bins=16, search_radius=8))
+    state = tracker.init(jnp.asarray(frame(40, 40)), [32, 32, 47, 47])
+    for t in range(1, 6):
+        state = tracker.step(state, jnp.asarray(frame(40 + 3 * t, 40 + 2 * t)))
+    r0, c0 = int(state["bbox"][0]), int(state["bbox"][1])
+    assert abs(r0 - (32 + 15)) <= 6          # tracked ~15px down
+    assert abs(c0 - (32 + 10)) <= 6          # and ~10px right
+
+
+def test_public_api_module():
+    ih = IntegralHistogram(num_bins=8, method="wf_tis", backend="jnp")
+    img = jnp.asarray(np.arange(64 * 64, dtype=np.uint8).reshape(64, 64))
+    H = ih(img)
+    assert H.shape == (8, 64, 64)
+    q = ih.query(H, jnp.array([0, 0, 63, 63]))
+    assert float(jnp.sum(q)) == 64 * 64

@@ -1,0 +1,293 @@
+"""Per-architecture smoke tests (reduced configs, real forward/train step
+on CPU) + decode-vs-forward consistency + family invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.models import api
+from repro.models.ssm import ssd_chunked
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32, with_labels=True):
+    batch = {"tokens": jax.random.randint(RNG, (b, s), 0, cfg.vocab_size)}
+    if with_labels:
+        batch["labels"] = jax.random.randint(RNG, (b, s), 0, cfg.vocab_size)
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = 0.02 * jnp.ones(
+            (b, cfg.num_prefix_embeds, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["src_embeds"] = 0.02 * jnp.ones(
+            (b, s, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes_and_finiteness(arch):
+    cfg = smoke_config(arch)
+    params = api.init_params(RNG, cfg)
+    batch = _batch(cfg)
+    logits, aux, _ = api.forward(params, batch, cfg)
+    s_total = 32 + (cfg.num_prefix_embeds if cfg.family == "vlm" else 0)
+    assert logits.shape == (2, s_total, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step_runs_and_loss_finite(arch):
+    from repro.train import init_state, make_optimizer, make_train_step
+
+    cfg = smoke_config(arch)
+    opt = make_optimizer(cfg, peak_lr=1e-3, warmup=2, total_steps=10)
+    state = init_state(RNG, cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt))
+    batch = _batch(cfg)
+    state, metrics = step(state, batch)
+    assert int(state["step"]) == 1
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0.0
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "llama4-scout-17b-a16e",
+                                  "mamba2-130m", "recurrentgemma-9b",
+                                  "seamless-m4t-large-v2"])
+def test_decode_matches_forward(arch):
+    """Prefill+decode logits == full-forward logits (one per family).
+
+    MoE uses a generous capacity factor: capacity drops legitimately
+    differ between 16- and 17-token routing, so we remove drops to test
+    the cache machinery itself.
+    """
+    cfg = smoke_config(arch)
+    cfg = dataclasses.replace(cfg, capacity_factor=8.0, dtype="float32")
+    params = api.init_params(RNG, cfg)
+    B, S = 2, 16
+    toks = jax.random.randint(RNG, (B, S + 1), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :S]}
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = 0.02 * jnp.ones(
+            (B, cfg.num_prefix_embeds, cfg.d_model), jnp.float32)
+    if cfg.family == "audio":
+        batch["src_embeds"] = 0.02 * jnp.ones((B, S, cfg.d_model), jnp.float32)
+    kw = {"src_len": S} if cfg.family == "audio" else {}
+    # fp32 cache: bf16 KV rounding flips top-1 routing ties (scout),
+    # which is quantization sensitivity, not cache-machinery error.
+    cache = api.init_cache(cfg, B, 32, dtype=jnp.float32, **kw)
+    lg_pre, cache = api.prefill(params, batch, cfg, cache)
+    lg_dec, cache = api.decode_step(params, toks[:, S:S + 1], cfg, cache)
+    full = dict(batch)
+    full["tokens"] = toks
+    lg_full, _, _ = api.forward(params, full, cfg)
+    np.testing.assert_allclose(np.asarray(lg_dec),
+                               np.asarray(lg_full[:, -1]), atol=0.02)
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "kimi-k2-1t-a32b",
+                                  "recurrentgemma-9b", "mamba2-130m"])
+def test_scan_vs_unroll(arch):
+    cfg = smoke_config(arch)
+    cfg = dataclasses.replace(cfg, dtype="float32", capacity_factor=8.0)
+    params = api.init_params(RNG, cfg)
+    batch = _batch(cfg, with_labels=False)
+    lg1, _, _ = api.forward(params, batch, cfg)
+    lg2, _, _ = api.forward(
+        params, batch, dataclasses.replace(cfg, scan_layers=False))
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2), atol=0.02)
+
+
+def test_chunked_attention_matches_dense():
+    from repro.models.layers import attention, attention_chunked
+
+    k1, k2, k3 = jax.random.split(RNG, 3)
+    B, S, H, HKV, D = 2, 100, 8, 2, 16
+    q = jax.random.normal(k1, (B, S, H, D))
+    k = jax.random.normal(k2, (B, S, HKV, D))
+    v = jax.random.normal(k3, (B, S, HKV, D))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    dense = attention(q, k, v, positions_q=pos, positions_kv=pos, causal=True)
+    chunked = attention_chunked(q, k, v, positions_q=pos, positions_kv=pos,
+                                causal=True, block_kv=32)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked),
+                               atol=2e-5)
+    # sliding-window variant
+    dense_w = attention(q, k, v, positions_q=pos, positions_kv=pos,
+                        causal=True, sliding_window=17)
+    chunk_w = attention_chunked(q, k, v, positions_q=pos, positions_kv=pos,
+                                causal=True, sliding_window=17, block_kv=16)
+    np.testing.assert_allclose(np.asarray(dense_w), np.asarray(chunk_w),
+                               atol=2e-5)
+
+
+def test_ssd_chunk_invariance():
+    """SSD output must not depend on the chunk size (carry correctness)."""
+    k1, k2, k3, k4 = jax.random.split(RNG, 4)
+    B, S, H, P, G, N = 2, 50, 4, 8, 1, 16
+    x = jax.random.normal(k1, (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(k2, (B, S, H)))
+    A = -jnp.exp(jax.random.normal(k3, (H,)) * 0.2)
+    Bm = jax.random.normal(k4, (B, S, G, N)) * 0.3
+    Cm = jax.random.normal(k1, (B, S, G, N)) * 0.3
+    y1, h1 = ssd_chunked(x, dt, A, Bm, Cm, chunk=5)
+    y2, h2 = ssd_chunked(x, dt, A, Bm, Cm, chunk=50)
+    y3, h3 = ssd_chunked(x, dt, A, Bm, Cm, chunk=16)   # padding path
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y3), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h3), atol=1e-4)
+
+
+def test_ssd_matches_sequential_recurrence():
+    """Chunked SSD == naive per-step recurrence (the definition)."""
+    k1, k2, k3, k4 = jax.random.split(RNG, 4)
+    B, S, H, P, N = 1, 20, 2, 4, 8
+    x = jax.random.normal(k1, (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(k2, (B, S, H)))
+    A = -jnp.exp(jax.random.normal(k3, (H,)) * 0.2)
+    Bm = jax.random.normal(k4, (B, S, 1, N)) * 0.3
+    Cm = jax.random.normal(k1, (B, S, 1, N)) * 0.3
+    y, _ = ssd_chunked(x, dt, A, Bm, Cm, chunk=7)
+    h = np.zeros((B, H, N, P))
+    for t in range(S):
+        a = np.exp(np.asarray(dt[:, t] * A))             # (B,H)
+        outer = np.einsum("bn,bhp->bhnp", np.asarray(Bm[:, t, 0]),
+                          np.asarray(x[:, t] * dt[:, t][..., None]))
+        h = h * a[..., None, None] + outer
+        want = np.einsum("bn,bhnp->bhp", np.asarray(Cm[:, t, 0]), h)
+        np.testing.assert_allclose(np.asarray(y[:, t]), want, atol=1e-4)
+
+
+def test_full_configs_param_counts():
+    """Exact configs must hit published parameter scales (6ND sanity)."""
+    n = {a: get_config(a).param_count() for a in ARCH_IDS}
+    assert 7.5e9 < n["llama3-8b"] < 8.5e9
+    assert 0.9e12 < n["kimi-k2-1t-a32b"] < 1.2e12
+    assert 95e9 < n["llama4-scout-17b-a16e"] < 120e9
+    assert 2.5e9 < n["qwen2.5-3b"] < 3.7e9
+    assert 3.2e9 < n["qwen3-4b"] < 4.8e9
+    assert 1.2e9 < n["qwen2-1.5b"] < 2.0e9
+    assert 6.5e9 < n["llava-next-mistral-7b"] < 7.8e9
+    assert 0.10e9 < n["mamba2-130m"] < 0.2e9
+    assert 7.5e9 < n["recurrentgemma-9b"] < 11e9
+    a = get_config("kimi-k2-1t-a32b").active_param_count()
+    assert 25e9 < a < 45e9
+    a = get_config("llama4-scout-17b-a16e").active_param_count()
+    assert 14e9 < a < 22e9
+
+
+def test_ring_cache_long_decode():
+    """Sliding-window decode at positions far beyond the window."""
+    cfg = smoke_config("recurrentgemma-9b")
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = api.init_params(RNG, cfg)
+    B = 1
+    cache = api.init_cache(cfg, B, 64)
+    # prefill 48 tokens (window is 32), then decode: must stay finite
+    toks = jax.random.randint(RNG, (B, 60), 0, cfg.vocab_size)
+    _, cache = api.prefill(params, {"tokens": toks[:, :48]}, cfg, cache)
+    for t in range(48, 52):
+        lg, cache = api.decode_step(params, toks[:, t:t + 1], cfg, cache)
+        assert bool(jnp.all(jnp.isfinite(lg)))
+    assert int(cache["len"]) == 52
+
+
+def test_rglru_matches_sequential_recurrence():
+    """Chunked RG-LRU == naive per-step recurrence (the definition)."""
+    from repro.models.griffin import _rglru_chunked, _rglru_gates
+
+    k1, k2 = jax.random.split(RNG)
+    B, S, W = 2, 23, 8
+    u = jax.random.normal(k1, (B, S, W))
+    p = {"lam": jnp.linspace(2.0, 6.0, W),
+         "g_a": 0.3 * jax.random.normal(k2, (W,)),
+         "b_a": jnp.zeros((W,)),
+         "g_x": 0.1 * jnp.ones((W,)),
+         "b_x": jnp.zeros((W,))}
+    h0 = jax.random.normal(k2, (B, W)) * 0.1
+    hs, h_last = _rglru_chunked(u, p, chunk=7, h0=h0)     # padding path
+    log_a, bgate = _rglru_gates(u, p)
+    h = np.asarray(h0)
+    for t in range(S):
+        h = np.exp(np.asarray(log_a[:, t])) * h + np.asarray(bgate[:, t])
+        np.testing.assert_allclose(np.asarray(hs[:, t]), h, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_last), h, atol=1e-5)
+
+
+def test_sp_ssd_matches_single_device():
+    """Sequence-parallel SSD (ppermute carry wavefront) == local scan,
+    run on 8 forced host devices in a subprocess."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent("""
+        import warnings; warnings.filterwarnings("ignore")
+        import dataclasses, jax, jax.numpy as jnp
+        from repro.configs import smoke_config
+        from repro.models import api
+        from repro.sharding.rules import ShardingRules, sharding_context
+        cfg = dataclasses.replace(smoke_config("mamba2-130m"),
+                                  dtype="float32", ssm_seq_parallel=True)
+        params = api.init_params(jax.random.PRNGKey(0), cfg)
+        batch = {"tokens": jax.random.randint(
+            jax.random.PRNGKey(1), (2, 64), 0, cfg.vocab_size)}
+        ref, _, _ = api.forward(
+            params, batch, dataclasses.replace(cfg, ssm_seq_parallel=False))
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        with mesh, sharding_context(mesh, ShardingRules()):
+            sp, _, _ = jax.jit(lambda p, b: api.forward(p, b, cfg))(
+                params, batch)
+        err = float(jnp.max(jnp.abs(ref - sp)))
+        assert err < 1e-3, err
+        print("SP OK", err)
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH="src")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=420)
+    assert proc.returncode == 0, proc.stderr[-1500:]
+    assert "SP OK" in proc.stdout
+
+
+def test_sp_rglru_matches_single_device():
+    """Sequence-parallel RG-LRU == local scan (8 forced host devices)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent("""
+        import warnings; warnings.filterwarnings("ignore")
+        import dataclasses, jax, jax.numpy as jnp
+        from repro.configs import smoke_config
+        from repro.models import api
+        from repro.sharding.rules import ShardingRules, sharding_context
+        cfg = dataclasses.replace(smoke_config("recurrentgemma-9b"),
+                                  dtype="float32", rnn_seq_parallel=True)
+        params = api.init_params(jax.random.PRNGKey(0), cfg)
+        batch = {"tokens": jax.random.randint(
+            jax.random.PRNGKey(1), (2, 64), 0, cfg.vocab_size)}
+        ref, _, _ = api.forward(
+            params, batch, dataclasses.replace(cfg, rnn_seq_parallel=False))
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        with mesh, sharding_context(mesh, ShardingRules()):
+            sp, _, _ = jax.jit(lambda p, b: api.forward(p, b, cfg))(
+                params, batch)
+        err = float(jnp.max(jnp.abs(ref - sp)))
+        assert err < 1e-3, err
+        print("rglru SP OK", err)
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH="src")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=420)
+    assert proc.returncode == 0, proc.stderr[-1500:]
+    assert "rglru SP OK" in proc.stdout

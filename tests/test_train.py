@@ -1,0 +1,174 @@
+"""Training substrate: optimizers, clipping, accumulation, compression,
+checkpoint/restart, fault injection, data determinism."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.data import TokenStream, make_stream, video_frames
+from repro.train import (
+    CheckpointManager, FaultInjector, Watchdog, adafactor, adamw,
+    init_state, make_optimizer, make_train_step, run_training,
+)
+from repro.train import grad as G
+
+RNG = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("make_opt", [adamw, adafactor])
+def test_optimizer_minimizes_quadratic(make_opt):
+    opt = make_opt(0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray(5.0)}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2) + p["b"] ** 2
+    for step in range(200):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, jnp.asarray(step))
+    assert float(loss(params)) < 1e-2
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor(0.1)
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((64,))}
+    st = opt.init(params)
+    assert st["w"]["vr"].shape == (64,)
+    assert st["w"]["vc"].shape == (32,)
+    assert st["b"]["v"].shape == (64,)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, norm = G.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(90 + 160), rel=1e-5)
+    _, norm2 = G.clip_by_global_norm(clipped, 1.0)
+    assert float(norm2) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_grad_accumulation_equivalence():
+    """sum of microbatch grads == full-batch grads (linear loss in batch)."""
+    cfg = smoke_config("qwen2-1.5b")
+    from repro.models import api
+    params = api.init_params(RNG, cfg)
+    batch = {"tokens": jax.random.randint(RNG, (4, 16), 0, cfg.vocab_size),
+             "labels": jax.random.randint(RNG, (4, 16), 0, cfg.vocab_size)}
+    loss_fn = lambda p, b: api.loss_fn(p, b, cfg)
+    _, _, g1 = G.accumulate_grads(loss_fn, params, batch, 1)
+    _, _, g4 = G.accumulate_grads(loss_fn, params, batch, 4)
+    diffs = [float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                                   b.astype(jnp.float32))))
+             for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g4))]
+    assert max(diffs) < 5e-3
+
+
+def test_int8_error_feedback_compression():
+    """Quantization error must be carried, not lost: over many steps the
+    summed dequantized grads converge to the summed true grads."""
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64,)) * 1e-3)}
+    err = G.init_error_buffer(g)
+    total_deq = jnp.zeros((64,))
+    for _ in range(50):
+        deq, err = G.compress_grads(g, err)
+        total_deq = total_deq + deq["w"]
+    np.testing.assert_allclose(np.asarray(total_deq),
+                               np.asarray(g["w"] * 50), rtol=0.02, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / fault tolerance
+# ---------------------------------------------------------------------------
+def _tiny_setup():
+    cfg = smoke_config("qwen2-1.5b")
+    opt = make_optimizer(cfg, peak_lr=1e-3, warmup=2, total_steps=40)
+    step = jax.jit(make_train_step(cfg, opt))
+    stream = make_stream(cfg, batch=2, seq_len=16)
+    init = lambda: init_state(RNG, cfg, opt)
+    return cfg, opt, step, stream, init
+
+
+def test_checkpoint_roundtrip():
+    _, _, _, _, init = _tiny_setup()
+    state = init()
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(state, 7)
+        assert mgr.latest_step() == 7
+        restored = mgr.restore()
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keeps_last_k():
+    _, _, _, _, init = _tiny_setup()
+    state = init()
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep_last=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(state, s)
+        steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+        assert steps == ["step_00000003", "step_00000004"]
+
+
+def test_restart_is_bit_exact():
+    """Crash at steps 5 and 11 -> restart -> identical params to a clean run."""
+    _, _, step, stream, init = _tiny_setup()
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        s_fault, _ = run_training(
+            init_state_fn=init, train_step=step, stream=stream,
+            ckpt=CheckpointManager(d1), num_steps=15, ckpt_every=5,
+            injector=FaultInjector(fail_at_steps=(5, 11)))
+        s_clean, _ = run_training(
+            init_state_fn=init, train_step=step, stream=stream,
+            ckpt=CheckpointManager(d2), num_steps=15, ckpt_every=100)
+        for a, b in zip(jax.tree.leaves(s_fault["params"]),
+                        jax.tree.leaves(s_clean["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_watchdog_flags_stragglers():
+    wd = Watchdog(ratio=2.0)
+    assert not wd.observe(0.1, 0)
+    assert not wd.observe(0.11, 1)
+    assert wd.observe(1.0, 2)          # 10x EMA -> straggler
+    assert wd.slow_steps == 1
+
+
+# ---------------------------------------------------------------------------
+# Data determinism (the seekable-stream contract)
+# ---------------------------------------------------------------------------
+def test_token_stream_seekable_and_deterministic():
+    s1 = TokenStream(1000, 4, 32, seed=3)
+    s2 = TokenStream(1000, 4, 32, seed=3)
+    b_a = s1.batch_at(17)
+    b_b = s2.batch_at(17)
+    np.testing.assert_array_equal(np.asarray(b_a["tokens"]),
+                                  np.asarray(b_b["tokens"]))
+    assert not np.array_equal(np.asarray(s1.batch_at(18)["tokens"]),
+                              np.asarray(b_a["tokens"]))
+    # labels are next-token shifted
+    full = TokenStream(1000, 4, 32, seed=3).batch_at(17)
+    np.testing.assert_array_equal(np.asarray(full["tokens"][:, 1:]),
+                                  np.asarray(full["labels"][:, :-1]))
+
+
+def test_video_frames_deterministic():
+    f1 = video_frames(32, 48, 3, seed=5)
+    f2 = video_frames(32, 48, 3, seed=5)
+    np.testing.assert_array_equal(f1, f2)
+    assert f1.shape == (3, 32, 48) and f1.dtype == np.uint8
+
+
+def test_multimodal_stream_shapes():
+    cfg = smoke_config("llava-next-mistral-7b")
+    s = make_stream(cfg, batch=2, seq_len=32)
+    b = s.batch_at(0)
+    assert b["prefix_embeds"].shape == (2, cfg.num_prefix_embeds, cfg.d_model)
+    assert b["tokens"].shape == (2, 32 - cfg.num_prefix_embeds)
