@@ -1,0 +1,66 @@
+"""Frame-batched throughput: frames/sec vs microbatch size per method.
+
+The paper's headline metric is frames per second on a video stream
+(300.4 fps at 640x480x32 bins); its dual-stream pipeline (§4.4) wins by
+overlapping transfer with compute.  On XLA an orthogonal lever is batching
+the frame axis into one dispatch (cf. Koppaka et al., arXiv:1011.0235):
+per-dispatch overhead is amortized and the scans vectorize across frames.
+
+Regimes (measured, CPU):
+  * dispatch-bound — small frames (ROI/tracking-window scale): batching
+    wins big; batch=16 is >= 1.5x frames/sec over batch=1 on wf_tis.
+  * cache-bound — large frames: the batched working set spills the LLC
+    and small batches win.  `IntegralHistogram.map_frames(batch_size=
+    "auto")` picks the regime from the per-frame footprint.
+
+This bench times the batched `integral_histogram` directly (pure dispatch
+throughput, batch = 1/4/16) for each method across both regimes; the
+pipeline-level overlap on top of it is measured by bench_pipeline.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_table, time_fn
+from repro.data import video_frames
+from repro.kernels.ops import integral_histogram
+
+BATCHES = (1, 4, 16)
+
+
+def run(quick: bool = False) -> str:
+    # (h, w, bins): ROI/tracking-window scale first (dispatch-bound — the
+    # batching win), then full-frame scales (cache-bound on CPU).
+    sizes = [(64, 64, 16), (240, 320, 16)]
+    methods = ["wf_tis", "cw_tis", "cw_sts"]
+    if not quick:
+        sizes.append((480, 640, 32))
+        methods.append("cw_b")
+
+    rows = []
+    for h, w, bins in sizes:
+        frames = video_frames(h, w, max(BATCHES), seed=7)
+        for method in methods:
+            fps = {}
+            for n in BATCHES:
+                fn = jax.jit(functools.partial(
+                    integral_histogram, num_bins=bins, method=method,
+                    backend="jnp"))
+                x = jnp.asarray(frames[:n]) if n > 1 else jnp.asarray(frames[0])
+                t = time_fn(fn, x, warmup=2, iters=3 if quick else 5)
+                fps[n] = n / t["median_s"]
+            rows.append([f"{h}x{w}x{bins}", method]
+                        + [f"{fps[n]:.2f}" for n in BATCHES]
+                        + [f"{fps[16] / fps[1]:.2f}x"])
+    return ("frames/sec by microbatch size (jnp backend)\n"
+            + fmt_table(["frame", "method"]
+                        + [f"batch={n}" for n in BATCHES] + ["16 vs 1"],
+                        rows))
+
+
+if __name__ == "__main__":
+    print(run())

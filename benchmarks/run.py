@@ -14,6 +14,8 @@ BENCHES = [
      "paper Fig. 9/10 — tile/block configuration sweep"),
     ("pipeline", "benchmarks.bench_pipeline",
      "paper Fig. 13/15 — dual-buffering frame rate"),
+    ("batched", "benchmarks.bench_batched",
+     "paper §4.4 + arXiv:1011.0235 — frame-batched throughput"),
     ("multidevice", "benchmarks.bench_multidevice",
      "paper Fig. 16/17 — multi-device bin/spatial sharding"),
     ("speedup", "benchmarks.bench_speedup",

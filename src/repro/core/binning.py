@@ -40,11 +40,15 @@ def bin_indices(
 
 
 def one_hot_bins(idx: jnp.ndarray, num_bins: int, dtype=jnp.float32) -> jnp.ndarray:
-    """Materialized Q: (h, w) int32 -> (b, h, w) {0,1}.
+    """Materialized Q: (..., h, w) int32 -> (..., b, h, w) {0,1}.
+
+    The bin axis is inserted just before the two spatial axes, so a single
+    frame maps (h, w) -> (b, h, w) and a frame stack maps
+    (n, h, w) -> (n, b, h, w).
 
     fp32 is exact for counts < 2**24 — the largest supported image plane
     (8k x 8k = 2**26) is handled by the fp64-accumulation flag in ref.py or
     by int32 accumulation; for every benchmarked shape fp32 is exact.
     """
     b = jnp.arange(num_bins, dtype=jnp.int32)
-    return (idx[None, :, :] == b[:, None, None]).astype(dtype)
+    return (idx[..., None, :, :] == b[:, None, None]).astype(dtype)

@@ -35,8 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map
 from repro.core.binning import PAD_BIN, bin_indices
 from repro.kernels.ops import integral_histogram
 

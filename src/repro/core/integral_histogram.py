@@ -2,17 +2,27 @@
 
 >>> ih = IntegralHistogram(num_bins=32)
 >>> H = ih(image)                          # (32, h, w)
+>>> Hs = ih(stack)                         # (n, 32, h, w) — one dispatch
 >>> hist = ih.query(H, [r0, c0, r1, c1])   # O(1) region histogram
+>>> for H in ih.map_frames(video, batch_size=16):   # streaming throughput
+...     ...
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Iterable, Iterator
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import region_query
 from repro.kernels.ops import integral_histogram as _compute
+
+# "auto" microbatching targets this per-dispatch output footprint — roughly
+# an LLC's worth, the crossover between dispatch-bound and cache-bound
+# regimes measured in benchmarks/bench_batched.py.
+_AUTO_BATCH_BYTES = 4 << 20
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,6 +49,7 @@ class IntegralHistogram:
     interpret: bool = False
 
     def __call__(self, image: jnp.ndarray) -> jnp.ndarray:
+        """(h, w) -> (num_bins, h, w); (n, h, w) -> (n, num_bins, h, w)."""
         return _compute(
             image,
             self.num_bins,
@@ -50,6 +61,51 @@ class IntegralHistogram:
             interpret=self.interpret,
             value_range=self.value_range,
         )
+
+    def map_frames(
+        self,
+        frames: Iterable,
+        *,
+        batch_size: int | str = "auto",
+        depth: int = 2,
+        device=None,
+    ) -> Iterator[jax.Array]:
+        """Stream integral histograms over a frame sequence.
+
+        Microbatches ``batch_size`` frames per dispatch through the batched
+        kernel path and keeps ``depth`` dispatches in flight (paper §4.4's
+        dual-buffering), yielding one (num_bins, h, w) result per frame in
+        order.  This is the throughput path for video: see
+        benchmarks/bench_batched.py for the frames/sec scaling.
+
+        ``batch_size="auto"`` sizes the microbatch from the per-frame
+        output footprint (num_bins * h * w fp32): small ROI-scale frames
+        are dispatch-bound and batch deep; full frames are cache-bound on
+        CPU and stay near batch 1 — the adaptive-batching idea of Koppaka
+        et al. (arXiv:1011.0235) restated for XLA dispatch.
+        """
+        import itertools
+
+        from repro.core.pipeline import DoubleBufferedExecutor
+
+        frames = iter(frames)
+        try:
+            first = next(frames)
+        except StopIteration:
+            return iter(())
+        if isinstance(batch_size, str):
+            if batch_size != "auto":
+                raise ValueError(
+                    f'batch_size must be an int or "auto", got {batch_size!r}'
+                )
+            h, w = first.shape[-2:]
+            per_frame_bytes = 4 * self.num_bins * h * w
+            batch_size = max(1, min(16, _AUTO_BATCH_BYTES // per_frame_bytes))
+
+        executor = DoubleBufferedExecutor(
+            self, depth=depth, device=device, batch_size=batch_size
+        )
+        return executor.map(itertools.chain([first], frames))
 
     # ---- O(1) analytics on a computed H ----
     query = staticmethod(region_query.region_histogram)

@@ -6,12 +6,18 @@ page-locked memory.  The JAX/TPU equivalent:
 
   * XLA dispatch is asynchronous: enqueueing a jitted computation returns
     immediately; only blocking on results synchronizes.
-  * `DoubleBufferedExecutor` keeps `depth` frames in flight — it stages
-    frame t+1 onto the device (device_put ~ cudaMemcpyAsync H2D) while the
-    kernel for frame t runs, and only blocks on frame t-depth+1's result
-    (~ D2H of the previous integral histogram).
+  * `DoubleBufferedExecutor` keeps `depth` dispatches in flight — it stages
+    the next chunk onto the device (device_put ~ cudaMemcpyAsync H2D) while
+    the kernel for the current chunk runs, and only blocks on the oldest
+    in-flight result (~ D2H of the previous integral histogram).
   * depth=1 degenerates to fully synchronous execution — the "no
     dual-buffering" baseline of Fig. 13.
+  * `batch_size` > 1 microbatches: frames are stacked on the host and
+    dispatched `batch_size` at a time through a single batched computation
+    (the rank-polymorphic `integral_histogram` accepts (n, h, w) stacks).
+    This amortizes per-dispatch overhead the same way Koppaka et al.'s
+    adaptive CUDA streams batch histogram work — on CPU/XLA it is where
+    most of the frames/sec headroom lives (benchmarks/bench_batched.py).
 
 On real TPUs the same code overlaps PCIe/DCN infeed with TPU compute; on
 CPU it overlaps host staging with XLA:CPU's async execution, which is what
@@ -28,29 +34,71 @@ import numpy as np
 
 
 class DoubleBufferedExecutor:
-    """Apply a jitted fn over a stream of host frames with dispatch-ahead."""
+    """Apply a jitted fn over a stream of host frames with dispatch-ahead.
 
-    def __init__(self, fn: Callable, depth: int = 2, device=None):
+    Args:
+      fn: jitted callable.  With ``batch_size > 1`` it must accept stacked
+        (k, *frame_shape) inputs and return outputs whose leading axis is
+        the frame axis (``integral_histogram`` and ``IntegralHistogram``
+        both do).
+      depth: number of dispatches kept in flight (1 = synchronous).
+      batch_size: frames stacked per dispatch.  The final chunk of a
+        stream may be smaller (one extra compile for the ragged tail).
+    """
+
+    def __init__(
+        self, fn: Callable, depth: int = 2, device=None, batch_size: int = 1
+    ):
         if depth < 1:
             raise ValueError("depth must be >= 1")
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
         self.fn = fn
         self.depth = depth
+        self.batch_size = batch_size
         self.device = device or jax.devices()[0]
 
-    def map(self, frames: Iterable[np.ndarray]) -> Iterator[jax.Array]:
-        """Yield fn(frame) for each frame, keeping `depth` frames in flight."""
-        inflight: collections.deque = collections.deque()
+    # -- internals ---------------------------------------------------------
+    def _chunks(self, frames: Iterable[np.ndarray]) -> Iterator[np.ndarray]:
+        """Group the stream into (batch_size, ...) stacks (or raw frames)."""
+        if self.batch_size == 1:
+            yield from frames
+            return
+        buf: list = []
         for frame in frames:
-            staged = jax.device_put(frame, self.device)   # async H2D
+            buf.append(frame)
+            if len(buf) == self.batch_size:
+                yield np.stack(buf)
+                buf = []
+        if buf:
+            yield np.stack(buf)
+
+    def _ready(self, out, is_batch: bool) -> Iterator[jax.Array]:
+        out = jax.block_until_ready(out)              # ~ D2H sync point
+        if is_batch:
+            # Per-frame views of an already-materialized device array —
+            # indexing is cheap; no extra host round-trips.
+            for i in range(out.shape[0]):
+                yield out[i]
+        else:
+            yield out
+
+    # -- public ------------------------------------------------------------
+    def map(self, frames: Iterable[np.ndarray]) -> Iterator[jax.Array]:
+        """Yield fn(frame) per input frame, `depth` dispatches in flight.
+
+        With ``batch_size > 1`` each dispatch covers ``batch_size`` frames,
+        but the iterator still yields one result per frame, in order.
+        """
+        is_batch = self.batch_size > 1
+        inflight: collections.deque = collections.deque()
+        for chunk in self._chunks(frames):
+            staged = jax.device_put(chunk, self.device)   # async H2D
             inflight.append(self.fn(staged))              # async dispatch
             if len(inflight) >= self.depth:
-                out = inflight.popleft()
-                out.block_until_ready()                   # ~ D2H sync point
-                yield out
+                yield from self._ready(inflight.popleft(), is_batch)
         while inflight:
-            out = inflight.popleft()
-            out.block_until_ready()
-            yield out
+            yield from self._ready(inflight.popleft(), is_batch)
 
 
 def prefetch_to_device(

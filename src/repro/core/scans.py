@@ -12,8 +12,16 @@ WF-TiS  — single fused pass: per-tile h-scan + v-scan with boundary
 
 The jnp versions here are schedule-faithful restatements used as CPU
 executables (wall-time benchmarks) and as shape/semantics references; the
-TPU-native schedules live in repro/kernels/.  All return (b, h, w)
-inclusive integral histograms identical to kernels/ref.py.
+TPU-native schedules live in repro/kernels/.
+
+Every method accepts a single frame ``(h, w)`` -> ``(b, h, w)`` or a frame
+stack ``(n, h, w)`` -> ``(n, b, h, w)``, identical to a loop of
+single-frame calls.  For the cross-weave methods the frame axis simply
+rides the leading batch dimensions of the same scan primitives (one fused
+dispatch, no per-frame launches — the throughput model of Koppaka et
+al.'s stream-batched histograms); WF-TiS is vmapped so its strip/carry
+schedule stays frame-faithful while XLA widens the carries to (n, b, w).
+All results are identical to kernels/ref.py.
 """
 
 from __future__ import annotations
@@ -33,23 +41,25 @@ def cw_b(image: jnp.ndarray, num_bins: int, value_range: int = 256) -> jnp.ndarr
     outs = []
     for b in range(num_bins):  # one "kernel launch" chain per bin (faithful)
         q = (idx == b).astype(jnp.float32)
-        h_scanned = jnp.cumsum(q, axis=1)          # horizontal prescan
-        t = jnp.swapaxes(h_scanned, 0, 1)          # 2-D transpose (materialized)
-        v_scanned = jnp.cumsum(t, axis=1)          # vertical prescan (as rows)
-        outs.append(jnp.swapaxes(v_scanned, 0, 1))
-    return jnp.stack(outs, axis=0)
+        h_scanned = jnp.cumsum(q, axis=-1)         # horizontal prescan
+        t = jnp.swapaxes(h_scanned, -2, -1)        # 2-D transpose (materialized)
+        v_scanned = jnp.cumsum(t, axis=-1)         # vertical prescan (as rows)
+        outs.append(jnp.swapaxes(v_scanned, -2, -1))
+    return jnp.stack(outs, axis=-3)
 
 
 # ---------------------------------------------------------------------------
 # CW-STS: one batched scan, one 3-D transpose, one batched scan (Algorithm 3).
+# A frame stack fuses into the scan's leading batch axes: (n, b, h, w) is one
+# (n*b)-deep batched scan, not n dispatches.
 # ---------------------------------------------------------------------------
 def cw_sts(image: jnp.ndarray, num_bins: int, value_range: int = 256) -> jnp.ndarray:
     idx = bin_indices(image, num_bins, value_range)
-    q = one_hot_bins(idx, num_bins)                          # (b, h, w) init pass
-    h_scanned = jnp.cumsum(q, axis=2)                        # batched row scan
-    transposed = jnp.swapaxes(h_scanned, 1, 2).copy()        # 3-D transpose
-    v_scanned = jnp.cumsum(transposed, axis=2)               # batched "row" scan
-    return jnp.swapaxes(v_scanned, 1, 2)                     # back to (b, h, w)
+    q = one_hot_bins(idx, num_bins)                          # (..., b, h, w) init pass
+    h_scanned = jnp.cumsum(q, axis=-1)                       # batched row scan
+    transposed = jnp.swapaxes(h_scanned, -2, -1).copy()      # 3-D transpose
+    v_scanned = jnp.cumsum(transposed, axis=-1)              # batched "row" scan
+    return jnp.swapaxes(v_scanned, -2, -1)                   # back to (..., b, h, w)
 
 
 # ---------------------------------------------------------------------------
@@ -69,13 +79,15 @@ def _blocked_cumsum_last(x: jnp.ndarray, tile: int) -> jnp.ndarray:
 
 
 def _pad_idx(idx: jnp.ndarray, th: int, tw: int) -> jnp.ndarray:
-    """Pad a bin-index image to tile multiples; padding matches no bin."""
+    """Pad a bin-index image (or stack) to tile multiples on the spatial
+    (last two) axes; padding matches no bin."""
     from repro.core.binning import PAD_BIN
 
-    h, w = idx.shape
+    h, w = idx.shape[-2:]
     ph, pw = (-h) % th, (-w) % tw
     if ph or pw:
-        idx = jnp.pad(idx, ((0, ph), (0, pw)), constant_values=PAD_BIN)
+        pad = [(0, 0)] * (idx.ndim - 2) + [(0, ph), (0, pw)]
+        idx = jnp.pad(idx, pad, constant_values=PAD_BIN)
     return idx
 
 
@@ -83,13 +95,13 @@ def cw_tis(
     image: jnp.ndarray, num_bins: int, value_range: int = 256, tile: int = 128
 ) -> jnp.ndarray:
     idx = bin_indices(image, num_bins, value_range)
-    h, w = image.shape
+    h, w = image.shape[-2:]
     th, tw = min(tile, h), min(tile, w)
     idx = _pad_idx(idx, th, tw)
     q = one_hot_bins(idx, num_bins)
     h_scanned = _blocked_cumsum_last(q, tw)                  # horizontal strips
-    v_scanned = _blocked_cumsum_last(jnp.swapaxes(h_scanned, 1, 2), th)
-    return jnp.swapaxes(v_scanned, 1, 2)[:, :h, :w]
+    v_scanned = _blocked_cumsum_last(jnp.swapaxes(h_scanned, -2, -1), th)
+    return jnp.swapaxes(v_scanned, -2, -1)[..., :h, :w]
 
 
 # ---------------------------------------------------------------------------
@@ -98,8 +110,8 @@ def cw_tis(
 # the Pallas kernel.  A lax.scan over row strips keeps the carry structure
 # explicit (the (b, w) column carry is exactly the kernel's VMEM scratch).
 # ---------------------------------------------------------------------------
-def wf_tis(
-    image: jnp.ndarray, num_bins: int, value_range: int = 256, tile: int = 128
+def _wf_tis_single(
+    image: jnp.ndarray, num_bins: int, value_range: int, tile: int
 ) -> jnp.ndarray:
     idx = bin_indices(image, num_bins, value_range)
     h, w = image.shape
@@ -119,6 +131,16 @@ def wf_tis(
     zero = jnp.zeros((num_bins, w), dtype=jnp.float32)
     _, strips = jax.lax.scan(strip_step, zero, idx_strips)
     return jnp.moveaxis(strips, 1, 0).reshape(num_bins, hp, w)[:, :h, :]
+
+
+def wf_tis(
+    image: jnp.ndarray, num_bins: int, value_range: int = 256, tile: int = 128
+) -> jnp.ndarray:
+    if image.ndim == 3:  # frame stack: widen the strip scan's carry to (n, b, w)
+        return jax.vmap(
+            lambda im: _wf_tis_single(im, num_bins, value_range, tile)
+        )(image)
+    return _wf_tis_single(image, num_bins, value_range, tile)
 
 
 METHODS = {"cw_b": cw_b, "cw_sts": cw_sts, "cw_tis": cw_tis, "wf_tis": wf_tis}

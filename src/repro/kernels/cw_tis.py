@@ -10,6 +10,11 @@ Binning is fused into the horizontal pass (the init kernel's extra pass is
 still avoided), so the measured gap vs WF-TiS isolates the h/v fusion —
 same methodology as the paper's Fig. 8 breakdown.
 
+Frame batching: both passes take the frame index as the outermost grid
+dimension, so an (n, h, w) stack is two pallas_calls total, not 2n.  The
+strip carries reset themselves at frame boundaries because their zeroing
+predicates (iw == 0 / ih == 0) fire when the inner raster restarts.
+
 Same MXU triangular-matmul scan trick as wf_tis.py.
 """
 
@@ -30,12 +35,12 @@ from repro.kernels.wf_tis import _col_scan_mxu, _row_scan_mxu
 
 
 def _hscan_kernel(idx_ref, out_ref, row_carry, *, bin_block, use_mxu):
-    """Grid (nbb, nth, ntw), column tiles innermost: strip sweep per bin
+    """Grid (n, nbb, nth, ntw), column tiles innermost: strip sweep per bin
     block (the paper's vertical-strip schedule, Fig. 5 left)."""
-    bb = pl.program_id(0)
-    iw = pl.program_id(2)
+    bb = pl.program_id(1)
+    iw = pl.program_id(3)
 
-    idx = idx_ref[...]
+    idx = idx_ref[0]
     th, tw = idx.shape
     bin_ids = bb * bin_block + jax.lax.broadcasted_iota(
         jnp.int32, (bin_block, th, tw), 0
@@ -46,20 +51,20 @@ def _hscan_kernel(idx_ref, out_ref, row_carry, *, bin_block, use_mxu):
     rc = jnp.where(iw == 0, 0.0, row_carry[...])           # (BIN_BLOCK, TH)
     hs = hs + rc[:, :, None]
     row_carry[...] = hs[:, :, -1]
-    out_ref[...] = hs
+    out_ref[0] = hs
 
 
 def _vscan_kernel(hh_ref, out_ref, col_carry, *, use_mxu):
-    """Grid (nbb, ntw, nth), row tiles innermost: horizontal-strip sweep
+    """Grid (n, nbb, ntw, nth), row tiles innermost: horizontal-strip sweep
     (Fig. 5 right).  Input is the horizontally-scanned tensor."""
-    ih = pl.program_id(2)
+    ih = pl.program_id(3)
 
-    hs = hh_ref[...]                                       # (BIN_BLOCK, TH, TW)
+    hs = hh_ref[0]                                         # (BIN_BLOCK, TH, TW)
     vs = _col_scan_mxu(hs) if use_mxu else jnp.cumsum(hs, axis=1)
     cc = jnp.where(ih == 0, 0.0, col_carry[...])           # (BIN_BLOCK, TW)
     vs = vs + cc[:, None, :]
     col_carry[...] = vs[:, -1, :]
-    out_ref[...] = vs
+    out_ref[0] = vs
 
 
 def cw_tis_pallas(
@@ -72,7 +77,10 @@ def cw_tis_pallas(
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Two-pass CW-TiS integral histogram (see wf_tis_pallas for contract)."""
-    h, w = idx.shape
+    squeeze = idx.ndim == 2
+    if squeeze:
+        idx = idx[None]
+    n, h, w = idx.shape
     if h % tile or w % tile:
         raise ValueError(f"padded image {h}x{w} not divisible by tile {tile}")
     if num_bins % bin_block:
@@ -81,26 +89,31 @@ def cw_tis_pallas(
 
     hh = pl.pallas_call(
         functools.partial(_hscan_kernel, bin_block=bin_block, use_mxu=use_mxu),
-        grid=(nbb, nth, ntw),
-        in_specs=[pl.BlockSpec((tile, tile), lambda bb, ih, iw: (ih, iw))],
+        grid=(n, nbb, nth, ntw),
+        in_specs=[
+            pl.BlockSpec((1, tile, tile), lambda f, bb, ih, iw: (f, ih, iw))
+        ],
         out_specs=pl.BlockSpec(
-            (bin_block, tile, tile), lambda bb, ih, iw: (bb, ih, iw)
+            (1, bin_block, tile, tile), lambda f, bb, ih, iw: (f, bb, ih, iw)
         ),
-        out_shape=jax.ShapeDtypeStruct((num_bins, h, w), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n, num_bins, h, w), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bin_block, tile), jnp.float32)],
         interpret=interpret,
     )(idx)
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_vscan_kernel, use_mxu=use_mxu),
-        grid=(nbb, ntw, nth),
+        grid=(n, nbb, ntw, nth),
         in_specs=[
-            pl.BlockSpec((bin_block, tile, tile), lambda bb, iw, ih: (bb, ih, iw))
+            pl.BlockSpec(
+                (1, bin_block, tile, tile), lambda f, bb, iw, ih: (f, bb, ih, iw)
+            )
         ],
         out_specs=pl.BlockSpec(
-            (bin_block, tile, tile), lambda bb, iw, ih: (bb, ih, iw)
+            (1, bin_block, tile, tile), lambda f, bb, iw, ih: (f, bb, ih, iw)
         ),
-        out_shape=jax.ShapeDtypeStruct((num_bins, h, w), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n, num_bins, h, w), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bin_block, tile), jnp.float32)],
         interpret=interpret,
     )(hh)
+    return out[0] if squeeze else out

@@ -5,6 +5,14 @@ image, pads spatial dims to tile multiples and bins to bin-block multiples
 (padding pixels get PAD_BIN so they match no bin), dispatches to the chosen
 method/backend, and crops the result back.
 
+Input rank is polymorphic over a frame batch axis:
+
+  (h, w)    -> (num_bins, h, w)       single frame
+  (n, h, w) -> (n, num_bins, h, w)    frame stack — identical to n
+               single-frame calls, executed as ONE dispatch (the jnp
+               methods fuse the frame axis into their batched scans; the
+               Pallas kernels take it as the outermost grid dimension).
+
 Backends:
   "pallas"  — the TPU kernels (on CPU only with interpret=True; tests do).
   "jnp"     — the schedule-faithful jnp restatements (XLA-compiled; used
@@ -29,11 +37,13 @@ PALLAS_METHODS = {"cw_tis": cw_tis_pallas, "wf_tis": wf_tis_pallas}
 
 
 def _pad_to(x: jnp.ndarray, mult_h: int, mult_w: int, fill) -> jnp.ndarray:
-    h, w = x.shape
+    """Pad the spatial (last two) axes up to multiples; leading axes kept."""
+    h, w = x.shape[-2:]
     ph = (-h) % mult_h
     pw = (-w) % mult_w
     if ph or pw:
-        x = jnp.pad(x, ((0, ph), (0, pw)), constant_values=fill)
+        pad = [(0, 0)] * (x.ndim - 2) + [(0, ph), (0, pw)]
+        x = jnp.pad(x, pad, constant_values=fill)
     return x
 
 
@@ -60,7 +70,9 @@ def integral_histogram(
     interpret: bool = False,
     value_range: int = 256,
 ) -> jnp.ndarray:
-    """Compute the (num_bins, h, w) inclusive integral histogram of image."""
+    """Inclusive integral histogram of a frame or an (n, h, w) frame stack."""
+    if image.ndim not in (2, 3):
+        raise ValueError(f"expected (h, w) or (n, h, w), got {image.shape}")
     if backend == "auto":
         backend = "pallas" if _on_tpu() else "jnp"
 
@@ -70,7 +82,7 @@ def integral_histogram(
         kw = {} if method in ("cw_b", "cw_sts") else {"tile": tile}
         return scans.METHODS[method](image, num_bins, value_range, **kw)
 
-    h, w = image.shape
+    h, w = image.shape[-2:]
     idx = bin_indices(image, num_bins, value_range)
     idx = _pad_to(idx, tile, tile, PAD_BIN)
     nb_pad = num_bins + (-num_bins) % bin_block
@@ -78,4 +90,4 @@ def integral_histogram(
         idx, nb_pad, tile=tile, bin_block=bin_block, use_mxu=use_mxu,
         interpret=interpret,
     )
-    return out[:num_bins, :h, :w]
+    return out[..., :num_bins, :h, :w]

@@ -19,9 +19,15 @@ TPU adaptation (DESIGN.md §2):
     the one-hot mask in VREGs — the paper's separate init kernel (a full
     extra write+read of b*h*w) never exists.  This is a beyond-paper win,
     reducing the HBM floor from 2 passes + init to (1/b read + 1 write).
-  * Grid order is (row_tiles, col_tiles, bin_blocks) with bins innermost:
-    consecutive grid steps reuse the same image block, so Pallas fetches
-    each image tile from HBM once, not once per bin block.
+  * Grid order is (frames, row_tiles, col_tiles, bin_blocks) with bins
+    innermost: consecutive grid steps reuse the same image block, so Pallas
+    fetches each image tile from HBM once, not once per bin block.
+  * Frame batching rides the outermost grid dimension: the same kernel
+    instance sweeps frame after frame, and the carry-reset predicates
+    (iw == 0 for row carries, ih == 0 for column carries) fire at every
+    frame boundary because the raster restarts — per-frame reset needs no
+    extra state.  One pallas_call for the whole stack amortizes dispatch
+    exactly like the paper's dual-stream frame pipeline (§4.4).
 
 Accumulation is fp32 (exact for counts < 2**24; all supported planes).
 """
@@ -81,8 +87,8 @@ def _col_scan_mxu(x: jnp.ndarray) -> jnp.ndarray:
 
 
 def _wf_tis_kernel(
-    idx_ref,      # (TH, TW) int32 bin indices (PAD_BIN=-1 outside the image)
-    out_ref,      # (BIN_BLOCK, TH, TW) fp32 integral histogram block
+    idx_ref,      # (1, TH, TW) int32 bin indices (PAD_BIN=-1 outside the image)
+    out_ref,      # (1, BIN_BLOCK, TH, TW) fp32 integral histogram block
     row_carry,    # VMEM scratch (NBB, BIN_BLOCK, TH) — right-edge carries
     col_carry,    # VMEM scratch (NBB, BIN_BLOCK, W_PAD) — bottom-edge carries
     *,
@@ -90,11 +96,11 @@ def _wf_tis_kernel(
     tile_w: int,
     use_mxu: bool,
 ):
-    ih = pl.program_id(0)
-    iw = pl.program_id(1)
-    bb = pl.program_id(2)
+    ih = pl.program_id(1)
+    iw = pl.program_id(2)
+    bb = pl.program_id(3)
 
-    idx = idx_ref[...]
+    idx = idx_ref[0]
     th, tw = idx.shape
 
     # Fused binning: one-hot mask for this block of bins, formed in VREGs.
@@ -110,7 +116,8 @@ def _wf_tis_kernel(
         hs = jnp.cumsum(mask, axis=2)
 
     # Add the running row carry (prefix of everything left of this tile in
-    # the current row strip), zeroed at the first column of tiles.
+    # the current row strip), zeroed at the first column of tiles — which
+    # also resets it at every new frame, since the raster restarts there.
     rc = jnp.where(iw == 0, 0.0, row_carry[bb])            # (BIN_BLOCK, TH)
     hs = hs + rc[:, :, None]
     row_carry[bb] = hs[:, :, -1]                           # new right edge
@@ -122,13 +129,13 @@ def _wf_tis_kernel(
         vs = jnp.cumsum(hs, axis=1)
 
     # Add the running column carry (full integral at the last row of the
-    # strip above), zeroed on the first strip.
+    # strip above), zeroed on the first strip — per frame, same argument.
     cols = pl.dslice(iw * tile_w, tile_w)
     cc = jnp.where(ih == 0, 0.0, col_carry[bb, :, cols])   # (BIN_BLOCK, TW)
     vs = vs + cc[:, None, :]
     col_carry[bb, :, cols] = vs[:, -1, :]                  # new bottom edge
 
-    out_ref[...] = vs
+    out_ref[0] = vs
 
 
 def wf_tis_pallas(
@@ -143,14 +150,19 @@ def wf_tis_pallas(
     """Fused WF-TiS integral histogram.
 
     Args:
-      idx: (h, w) int32 bin indices, already padded so h % tile == 0 and
-        w % tile == 0 (padding uses PAD_BIN so it matches no bin).
+      idx: (h, w) or (n, h, w) int32 bin indices, already padded so
+        h % tile == 0 and w % tile == 0 (padding uses PAD_BIN so it matches
+        no bin).
       num_bins: padded bin count, multiple of ``bin_block``.
 
     Returns:
-      (num_bins, h, w) fp32 inclusive integral histogram.
+      (num_bins, h, w) fp32 inclusive integral histogram for a single
+      frame, (n, num_bins, h, w) for a frame stack.
     """
-    h, w = idx.shape
+    squeeze = idx.ndim == 2
+    if squeeze:
+        idx = idx[None]
+    n, h, w = idx.shape
     if h % tile or w % tile:
         raise ValueError(f"padded image {h}x{w} not divisible by tile {tile}")
     if num_bins % bin_block:
@@ -164,14 +176,17 @@ def wf_tis_pallas(
         pltpu.VMEM((nbb, bin_block, tile), jnp.float32),  # row carries
         pltpu.VMEM((nbb, bin_block, w), jnp.float32),     # column carries
     ]
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
-        grid=(nth, ntw, nbb),
-        in_specs=[pl.BlockSpec((tile, tile), lambda ih, iw, bb: (ih, iw))],
+        grid=(n, nth, ntw, nbb),
+        in_specs=[
+            pl.BlockSpec((1, tile, tile), lambda f, ih, iw, bb: (f, ih, iw))
+        ],
         out_specs=pl.BlockSpec(
-            (bin_block, tile, tile), lambda ih, iw, bb: (bb, ih, iw)
+            (1, bin_block, tile, tile), lambda f, ih, iw, bb: (f, bb, ih, iw)
         ),
-        out_shape=jax.ShapeDtypeStruct((num_bins, h, w), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n, num_bins, h, w), jnp.float32),
         scratch_shapes=scratch,
         interpret=interpret,
     )(idx)
+    return out[0] if squeeze else out

@@ -153,8 +153,10 @@ def _rglru_seq_parallel(u, p, chunk: int, mesh, rules, h0=None):
     ICI scale; states here are the diagonal (B, w) RG-LRU hiddens).
     Returns (h_seq, h_last), h_seq sequence-sharded like u.
     """
-    from jax import lax, shard_map
+    from jax import lax
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     seq_ax = rules.present(mesh, rules.tp_axes)[0]
     batch_axes = rules.present(mesh, rules.batch_axes)

@@ -28,8 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map
 from repro.models.layers import dense_init
 from repro.sharding.rules import current_context
 

@@ -162,8 +162,9 @@ def ssd_seq_parallel(xh, dt, A, Bm, Cm, chunk: int, mesh, rules, h0=None):
 
     Returns (y, h_final) with y sequence-sharded like the input.
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     seq_ax = rules.present(mesh, rules.tp_axes)[0]
     batch_axes = rules.present(mesh, rules.batch_axes)

@@ -89,7 +89,9 @@ def compressed_psum(partials: jnp.ndarray, mesh, axis: str) -> jnp.ndarray:
         sg = lax.all_gather(scale, axis)
         return jnp.tensordot(sg, qg.astype(jnp.float32), axes=((0,), (0,)))
 
-    return jax.shard_map(
+    from repro.compat import shard_map
+
+    return shard_map(
         inner, mesh=mesh,
         in_specs=P(axis, *([None] * (partials.ndim - 1))),
         out_specs=P(*([None] * (partials.ndim - 1))),

@@ -1,0 +1,143 @@
+"""Frame-batch axis correctness: (n, h, w) stacks must equal a Python loop
+of single-frame calls — bit-exactly (all arithmetic is integer-valued
+fp32) — for every method on both backends, including non-tile-multiple
+shapes and bin counts that don't divide the kernel bin block.  Also covers
+the microbatched pipeline and the `map_frames` streaming API."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import scans
+from repro.core.integral_histogram import IntegralHistogram
+from repro.core.pipeline import DoubleBufferedExecutor
+from repro.kernels.ops import integral_histogram
+from repro.kernels.ref import integral_histogram_ref
+
+
+def _stack(rng, n, h, w):
+    return rng.integers(0, 256, (n, h, w), dtype=np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# jnp backend: all four methods
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", sorted(scans.METHODS))
+@pytest.mark.parametrize("nhw,bins", [
+    ((3, 45, 37), 12),      # non-tile-multiple spatial dims, odd bins
+    ((2, 64, 64), 8),       # tile-friendly
+])
+def test_jnp_batched_equals_single_loop(rng, method, nhw, bins):
+    imgs = _stack(rng, *nhw)
+    batched = integral_histogram(
+        jnp.asarray(imgs), bins, method=method, backend="jnp")
+    singles = [
+        integral_histogram(jnp.asarray(im), bins, method=method, backend="jnp")
+        for im in imgs
+    ]
+    assert batched.shape == (nhw[0], bins, nhw[1], nhw[2])
+    for i, s in enumerate(singles):
+        np.testing.assert_array_equal(np.asarray(batched[i]), np.asarray(s))
+
+
+@pytest.mark.parametrize("method", sorted(scans.METHODS))
+def test_acceptance_8x240x320(rng, method):
+    """The ISSUE's acceptance shape: (8, 240, 320) bit-exact vs 8 calls."""
+    imgs = _stack(rng, 8, 240, 320)
+    batched = integral_histogram(
+        jnp.asarray(imgs), 16, method=method, backend="jnp")
+    for i in range(8):
+        single = integral_histogram(
+            jnp.asarray(imgs[i]), 16, method=method, backend="jnp")
+        np.testing.assert_array_equal(np.asarray(batched[i]), np.asarray(single))
+
+
+# ---------------------------------------------------------------------------
+# pallas backend (interpret mode): frame axis in the kernel grid
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", ["cw_tis", "wf_tis"])
+@pytest.mark.parametrize("nhw,bins,bin_block", [
+    ((3, 40, 56), 6, 4),    # padding path + num_bins % bin_block != 0
+    ((2, 32, 32), 8, 8),    # exact tiling
+])
+def test_pallas_batched_equals_single_loop(rng, method, nhw, bins, bin_block):
+    imgs = _stack(rng, *nhw)
+    kw = dict(method=method, backend="pallas", tile=16,
+              bin_block=bin_block, interpret=True)
+    batched = integral_histogram(jnp.asarray(imgs), bins, **kw)
+    assert batched.shape == (nhw[0], bins, nhw[1], nhw[2])
+    for i in range(nhw[0]):
+        single = integral_histogram(jnp.asarray(imgs[i]), bins, **kw)
+        np.testing.assert_array_equal(np.asarray(batched[i]), np.asarray(single))
+        ref = integral_histogram_ref(jnp.asarray(imgs[i]), bins)
+        np.testing.assert_allclose(
+            np.asarray(batched[i]), np.asarray(ref), atol=1e-3)
+
+
+def test_pallas_batched_carry_reset(rng):
+    """Frames must not leak carries into each other: a stack whose second
+    frame is all-zero must produce a zero-bin-independent H for frame 2."""
+    imgs = np.zeros((2, 32, 32), np.uint8)
+    imgs[0] = 255  # frame 0 fills the last bin with h*w counts
+    out = integral_histogram(jnp.asarray(imgs), 4, method="wf_tis",
+                             backend="pallas", tile=16, interpret=True)
+    # frame 1 is all zeros -> every pixel in bin 0; bins 1..3 empty
+    assert float(out[1, 0, -1, -1]) == 32 * 32
+    assert float(jnp.sum(out[1, 1:])) == 0.0
+    # frame 0 unpolluted: all mass in the last bin
+    assert float(out[0, 3, -1, -1]) == 32 * 32
+
+
+# ---------------------------------------------------------------------------
+# pipeline microbatching + public streaming API
+# ---------------------------------------------------------------------------
+def test_executor_microbatch_matches_per_frame(rng):
+    frames = list(_stack(rng, 7, 48, 64))
+    ih = IntegralHistogram(num_bins=8, backend="jnp")
+    per_frame = [np.asarray(ih(jnp.asarray(f))) for f in frames]
+    for batch_size in (1, 3, 16):  # 3 leaves a ragged tail; 16 > stream len
+        ex = DoubleBufferedExecutor(ih, depth=2, batch_size=batch_size)
+        outs = [np.asarray(o) for o in ex.map(frames)]
+        assert len(outs) == len(frames)
+        for got, want in zip(outs, per_frame):
+            np.testing.assert_array_equal(got, want)
+
+
+def test_map_frames_streaming(rng):
+    frames = list(_stack(rng, 5, 40, 40))
+    ih = IntegralHistogram(num_bins=8, backend="jnp")
+    outs = list(ih.map_frames(frames, batch_size=2))
+    assert len(outs) == 5
+    for f, H in zip(frames, outs):
+        assert H.shape == (8, 40, 40)
+        # total count corner == number of pixels
+        assert float(jnp.sum(H[:, -1, -1])) == 40 * 40
+        np.testing.assert_array_equal(
+            np.asarray(H), np.asarray(ih(jnp.asarray(f))))
+
+
+def test_map_frames_auto_batch(rng):
+    """batch_size="auto" batches deep on ROI-scale frames, shallow on big
+    ones, and stays correct either way."""
+    ih = IntegralHistogram(num_bins=16, backend="jnp")
+    small = list(_stack(rng, 6, 64, 64))       # dispatch-bound: deep batch
+    outs = list(ih.map_frames(small))          # default batch_size="auto"
+    assert len(outs) == 6
+    np.testing.assert_array_equal(
+        np.asarray(outs[3]), np.asarray(ih(jnp.asarray(small[3]))))
+
+    big = list(_stack(rng, 2, 256, 320))       # cache-bound: batch ~ 1
+    outs = list(ih.map_frames(big))
+    assert len(outs) == 2
+    np.testing.assert_array_equal(
+        np.asarray(outs[1]), np.asarray(ih(jnp.asarray(big[1]))))
+
+    assert list(IntegralHistogram(num_bins=4).map_frames([])) == []
+
+
+def test_executor_rejects_bad_config():
+    ih = IntegralHistogram(num_bins=4, backend="jnp")
+    with pytest.raises(ValueError):
+        DoubleBufferedExecutor(ih, depth=0)
+    with pytest.raises(ValueError):
+        DoubleBufferedExecutor(ih, batch_size=0)

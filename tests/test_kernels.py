@@ -7,7 +7,7 @@ requires (CPU container: interpret=True executes the kernel body)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.ops import integral_histogram
 from repro.kernels.ref import integral_histogram_ref
