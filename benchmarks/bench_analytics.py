@@ -1,0 +1,159 @@
+"""O(1) analytics throughput: sliding-window queries and the tracker.
+
+Two regressions this bench guards:
+
+  * **windows/sec, gather vs slice** — `sliding_window_histograms` used
+    to issue one Eq.-2 gather per window position; on a regular grid all
+    four corners of every window live on a strided lattice, so the whole
+    query field is four strided slices of H combined elementwise (no
+    index arrays, no gather).  The paper's dense multi-scale search
+    (640x480, 32 bins, stride 1 -> ~280k windows) is the headline shape.
+    Caveat for reading the steady-state column: XLA:CPU constant-folds
+    the gather's strided index arrays into near-slice code, so both
+    paths sit at the memory-bandwidth floor and the slice win there is
+    a few percent; the structural win shows in (a) first-call latency —
+    the gather path folds megabytes of index constants per compiled
+    (window, stride) variant, which is what `multi_scale_search` pays
+    per scale — and (b) gather-hostile backends (TPU), where index
+    arrays never lower to strided loads.
+
+  * **tracker frames/sec, step loop vs track()** — `FragmentTracker.track`
+    chunks the clip, computes each chunk's integral histograms in ONE
+    batched dispatch (PR 1's (n, h, w) kernel path) and threads the state
+    through a `lax.scan`, vs the per-frame `step` loop that pays one H
+    dispatch + one vote dispatch per frame.
+
+Both comparisons are bit-exact (tests/test_analytics.py); this bench
+reports only the speed side.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import time
+
+from benchmarks import common
+from benchmarks.common import fmt_table, time_fn
+from repro.core.region_query import sliding_window_histograms
+from repro.core.tracking import FragmentTracker, TrackerConfig
+from repro.data import video_frames
+from repro.kernels.ops import integral_histogram
+
+
+def _windows_rows(quick: bool) -> list:
+    # (h, w, bins, stride): the paper's 640x480x32 dense-stride search is
+    # the headline row; quick keeps a smaller frame so CI stays fast.
+    # Sub-millisecond cases are omitted — dispatch jitter drowns them.
+    cases = [(240, 320, 16, 2), (240, 320, 16, 1)]
+    if not quick:
+        cases += [(480, 640, 32, 4), (480, 640, 32, 1)]
+    window = (24, 24)
+    rows = []
+    for h, w, bins, stride in cases:
+        img = jnp.asarray(video_frames(h, w, 1, seed=11)[0])
+        H = integral_histogram(img, bins, backend="jnp")
+        n_win = ((h - window[0]) // stride + 1) * ((w - window[1]) // stride + 1)
+        fns = {
+            impl: jax.jit(functools.partial(
+                sliding_window_histograms, window=window, stride=stride,
+                impl=impl))
+            for impl in ("gather", "slice")
+        }
+        # Interleave the two implementations and keep the per-impl min:
+        # back-to-back same-impl medians are hostage to machine-load drift
+        # on shared hosts, which would drown the comparison in noise.
+        iters = 1 if common.SMOKE else (3 if quick else 9)
+        best = {}
+        for impl, fn in fns.items():
+            jax.block_until_ready(fn(H))             # compile + warm
+            best[impl] = float("inf")
+        for _ in range(iters):
+            for impl, fn in fns.items():
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(H))
+                best[impl] = min(best[impl], time.perf_counter() - t0)
+        wps = {impl: n_win / best[impl] for impl in fns}
+        # First-call latency: fresh jit per sample (distinct window sizes,
+        # like multi_scale_search compiling one variant per scale).
+        first = {}
+        n_first = 1 if common.SMOKE else 3
+        for impl in fns:
+            samples = []
+            for k in range(n_first):
+                fn = jax.jit(functools.partial(
+                    sliding_window_histograms,
+                    window=(window[0] + 1 + k, window[1]), stride=stride,
+                    impl=impl))
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(H))
+                samples.append(time.perf_counter() - t0)
+            first[impl] = sorted(samples)[len(samples) // 2]
+        rows.append([f"{h}x{w}x{bins}", f"s={stride}", f"{n_win}",
+                     f"{wps['gather']:.3g}", f"{wps['slice']:.3g}",
+                     f"{wps['slice'] / wps['gather']:.2f}x",
+                     f"{first['gather']*1e3:.0f}", f"{first['slice']*1e3:.0f}",
+                     f"{first['gather'] / first['slice']:.2f}x"])
+    return rows
+
+
+def _tracker_rows(quick: bool) -> list:
+    n_frames = 12 if quick else 32
+    cases = [(128, 128, 1), (128, 128, 4)]
+    if not quick:
+        cases.append((240, 320, 4))
+    rows = []
+    for h, w, n_targets in cases:
+        frames = video_frames(h, w, n_frames + 1, seed=5)
+        tracker = FragmentTracker(TrackerConfig(num_bins=16, search_radius=8))
+        size = min(h, w) // 4
+        starts = np.stack([
+            [r, c, r + size - 1, c + size - 1]
+            for r, c in zip(
+                np.linspace(4, h - size - 4, n_targets).astype(int),
+                np.linspace(4, w - size - 4, n_targets).astype(int))
+        ])
+        bbox = starts[0] if n_targets == 1 else starts
+        state0 = tracker.init(jnp.asarray(frames[0]), bbox)
+        clip = frames[1:]
+
+        def step_loop():
+            st = state0
+            for f in clip:
+                st = tracker.step(st, jnp.asarray(f))
+            return st["bbox"]
+
+        def track_clip():
+            _, boxes = tracker.track(state0, clip)     # batch_size="auto"
+            return boxes
+
+        t_loop = time_fn(step_loop, warmup=1, iters=2 if quick else 3)
+        t_track = time_fn(track_clip, warmup=1, iters=2 if quick else 3)
+        fps_loop = n_frames / t_loop["median_s"]
+        fps_track = n_frames / t_track["median_s"]
+        rows.append([f"{h}x{w}", f"t={n_targets}",
+                     f"{fps_loop:.2f}", f"{fps_track:.2f}",
+                     f"{fps_track / fps_loop:.2f}x"])
+    return rows
+
+
+def run(quick: bool = False) -> str:
+    win = fmt_table(
+        ["frame", "stride", "windows", "gather w/s", "slice w/s",
+         "w/s ratio", "gather 1st ms", "slice 1st ms", "1st ratio"],
+        _windows_rows(quick))
+    trk = fmt_table(
+        ["frame", "targets", "step-loop fps", "track() fps", "speedup"],
+        _tracker_rows(quick))
+    return ("sliding-window histograms: windows/sec by implementation\n"
+            + win
+            + "\n\ntracker: frames/sec, per-frame step loop vs batched track()\n"
+            + trk)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -11,9 +11,16 @@ import time
 import jax
 import numpy as np
 
+# Set by `benchmarks.run --smoke` (CI): collapse every timing loop to a
+# single un-warmed iteration so bench scripts execute end to end without
+# burning CI minutes on stable medians.
+SMOKE = False
+
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> dict:
     """Median wall time of a jitted callable (blocks on results)."""
+    if SMOKE:
+        warmup, iters = 0, 1
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)

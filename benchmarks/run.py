@@ -1,5 +1,9 @@
 """Benchmark driver: one bench per paper table/figure + the roofline
-aggregation.  `python -m benchmarks.run [--quick] [--only NAME]`."""
+aggregation.  `python -m benchmarks.run [--quick|--smoke] [--only NAME]`.
+
+`--smoke` is the CI mode: quick sizes AND single-iteration timing
+(benchmarks.common.SMOKE), so every bench script still executes end to
+end — numbers are meaningless, rot is caught."""
 
 from __future__ import annotations
 
@@ -16,6 +20,8 @@ BENCHES = [
      "paper Fig. 13/15 — dual-buffering frame rate"),
     ("batched", "benchmarks.bench_batched",
      "paper §4.4 + arXiv:1011.0235 — frame-batched throughput"),
+    ("analytics", "benchmarks.bench_analytics",
+     "paper abstract — O(1) sliding-window queries + tracker fps"),
     ("multidevice", "benchmarks.bench_multidevice",
      "paper Fig. 16/17 — multi-device bin/spatial sharding"),
     ("speedup", "benchmarks.bench_speedup",
@@ -29,10 +35,16 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="reduced sizes/iterations")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: --quick sizes + 1 timing iteration")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
+    if args.smoke:
+        from benchmarks import common
+        common.SMOKE = True
+        args.quick = True
 
     failures = []
     for name, module, desc in BENCHES:

@@ -5,13 +5,20 @@ Pipeline per frame (all on-accelerator once the frame is staged):
      `IntegralHistogram.map_frames` microbatches frames per dispatch and
      keeps dispatches in flight (paper §4.4 dual-buffering + the
      frame-batch axis of arXiv:1011.0235)
-  2. fragments-based tracker update (paper ref. [13]) — O(1) histogram
-     queries for every candidate window
-  3. likelihood map for the tracked target (abstract: "feature likelihood
-     maps ... play a critical role")
+  2. multi-target fragments tracker update (paper ref. [13]) consuming
+     the streamed H via `step_on_h` — the frame's integral histogram is
+     computed ONCE and shared by every target's O(1) candidate queries
+  3. batched likelihood maps (abstract: "feature likelihood maps ... play
+     a critical role"): the last `--map-frames` H's are stacked and ONE
+     rank-polymorphic `likelihood_map` call scores every window of every
+     frame
+
+For offline clips, `FragmentTracker.track` runs the same math as one
+batched-H + `lax.scan` loop per chunk (see benchmarks/bench_analytics.py
+for the frames/sec delta vs the per-frame loop).
 
     PYTHONPATH=src python examples/video_analytics.py [--frames 40]
-                   [--batch auto|N]
+                   [--batch auto|N] [--targets 2]
 """
 
 import argparse
@@ -37,42 +44,62 @@ def main(argv=None):
                     help='frames per dispatch: "auto" or an int')
     ap.add_argument("--depth", type=int, default=2,
                     help="dispatches kept in flight (1 = synchronous)")
+    ap.add_argument("--targets", type=int, default=2,
+                    help="simultaneously tracked targets")
+    ap.add_argument("--map-frames", type=int, default=4,
+                    help="trailing frames scored by one batched "
+                         "likelihood_map call")
     args = ap.parse_args(argv)
     h, w = args.hw
     batch = args.batch if args.batch == "auto" else int(args.batch)
 
     frames = video_frames(h, w, args.frames, seed=3)
     print(f"{args.frames} frames of {h}x{w}, {args.bins} bins, "
-          f"batch={batch}, depth={args.depth}")
+          f"batch={batch}, depth={args.depth}, targets={args.targets}")
 
     # --- stage 1: batched + double-buffered integral histograms ----------
     ih = IntegralHistogram(num_bins=args.bins, method="wf_tis",
                            backend="auto")
 
-    # --- stage 2+3: tracker + likelihood map consume H ------------------
+    # --- stage 2: multi-target tracker rides the streamed H --------------
     tracker = FragmentTracker(TrackerConfig(num_bins=args.bins,
                                             search_radius=10))
-    state = tracker.init(jnp.asarray(frames[0]), [h // 3, w // 3,
-                                                  h // 3 + 47, w // 3 + 47])
-    target_hist = region_histogram(ih(jnp.asarray(frames[0])), state["bbox"])
+    size = 48
+    bboxes = np.stack([
+        [r, c, r + size - 1, c + size - 1]
+        for r, c in zip(
+            np.linspace(h // 4, 3 * h // 4 - size, args.targets).astype(int),
+            np.linspace(w // 4, 3 * w // 4 - size, args.targets).astype(int))
+    ])
+    state = tracker.init(jnp.asarray(frames[0]), bboxes)
+    target_hists = region_histogram(ih(jnp.asarray(frames[0])),
+                                    state["bbox"])          # (t, bins)
 
     t0 = time.perf_counter()
-    boxes = []
-    stream = ih.map_frames(frames, batch_size=batch, depth=args.depth)
-    for i, H in enumerate(stream):
-        state = tracker.step(state, jnp.asarray(frames[i]))
+    boxes, tail_H = [], []
+    for H in ih.map_frames(frames, batch_size=batch, depth=args.depth):
+        state = tracker.step_on_h(state, H)     # H shared across targets
         boxes.append(np.asarray(state["bbox"]))
-        if i == args.frames - 1:
-            lmap = likelihood_map(H, target_hist, (48, 48),
-                                  distances.intersection, stride=16)
+        tail_H.append(H)
+        if len(tail_H) > args.map_frames:
+            tail_H.pop(0)
     dt = time.perf_counter() - t0
+
+    # --- stage 3: one batched likelihood_map over the trailing frames ----
+    Hs = jnp.stack(tail_H)                      # (k, bins, h, w)
+    lmap = likelihood_map(Hs, target_hists[0], (size, size),
+                          distances.intersection, stride=16)
     jax.block_until_ready(lmap)
 
     print(f"pipeline: {args.frames/dt:.2f} frames/sec "
           f"({dt/args.frames*1e3:.1f} ms/frame) on {jax.devices()[0]}")
-    print(f"track: start {boxes[0][:2]} -> end {boxes[-1][:2]}")
-    print(f"likelihood map {lmap.shape}, peak={float(lmap.max()):.3f} at "
-          f"{np.unravel_index(int(jnp.argmax(lmap)), lmap.shape)}")
+    for t in range(args.targets):
+        print(f"track[{t}]: start {boxes[0][t][:2]} -> end {boxes[-1][t][:2]}")
+    peak = tuple(
+        int(i) for i in np.unravel_index(int(jnp.argmax(lmap[-1])),
+                                         lmap.shape[1:]))
+    print(f"likelihood maps {lmap.shape} (batched over {lmap.shape[0]} "
+          f"frames), last-frame peak={float(lmap[-1].max()):.3f} at {peak}")
 
 
 if __name__ == "__main__":

@@ -22,8 +22,12 @@ def intersection(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
 
 
 def bhattacharyya(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
-    """Bhattacharyya coefficient (similarity in [0, 1])."""
-    return jnp.sum(jnp.sqrt(normalize(a) * normalize(b) + _EPS), axis=-1)
+    """Bhattacharyya coefficient (similarity in [0, 1]).
+
+    sqrt(a) * sqrt(b) instead of sqrt(a * b + eps): an eps inside the
+    sqrt adds ~sqrt(eps) per empty bin, pushing identical histograms
+    above 1 and disjoint ones above 0 (at 128 bins: 1.0127 and 0.0128)."""
+    return jnp.sum(jnp.sqrt(normalize(a)) * jnp.sqrt(normalize(b)), axis=-1)
 
 
 def chi2(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:

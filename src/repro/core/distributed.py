@@ -79,13 +79,13 @@ def bin_sharded_ih(
 ) -> jnp.ndarray:
     """Paper's multi-GPU scheme: bins sharded over ``bin_axis``.
 
-    Returns H (num_bins, h, w) sharded as P(bin_axis, None, None).
+    Accepts an (h, w) frame or an (n, h, w) stack (one batched dispatch
+    per shard).  Returns H ([n,] num_bins, h, w) sharded over bins.
     """
     nshards = mesh.shape[bin_axis]
     if num_bins % nshards:
         raise ValueError(f"{num_bins} bins not divisible by {nshards} shards")
     local_bins = num_bins // nshards
-    other_axes = tuple(n for n in mesh.axis_names if n != bin_axis)
 
     def shard_fn(img):
         idx = bin_indices(img, num_bins, value_range)
@@ -98,16 +98,14 @@ def bin_sharded_ih(
             value_range=None,
         )
 
+    lead = image.ndim - 2                   # 0 single frame, 1 frame stack
     fn = shard_map(
         shard_fn,
         mesh=mesh,
-        in_specs=P(),                       # frame replicated
-        out_specs=P(bin_axis, None, None),  # H sharded over bins
+        in_specs=P(),                       # frame(s) replicated
+        out_specs=P(*([None] * lead), bin_axis, None, None),
         check_vma=False,
     )
-    if other_axes:
-        # shard_fn is replicated over the unused axes automatically.
-        pass
     return fn(image)
 
 
@@ -168,16 +166,22 @@ def spatial_sharded_ih(
 def distributed_region_query(H_sharded, rects, mesh, bin_axis="model"):
     """Region queries against a bin-sharded H: queries are local per bin
     shard; results concatenate over the bin axis (no collective needed —
-    histograms over bins are embarrassingly parallel, paper §4.6)."""
+    histograms over bins are embarrassingly parallel, paper §4.6).
+
+    Rank-polymorphic over frame batching like ``region_histogram``: H may
+    be (b, h, w) or a stack (..., b, h, w) sharded over its bin axis;
+    rects (..., 4) are replicated.  Returns (*H_lead, *rects_lead, b)
+    with bins sharded over ``bin_axis``."""
     from repro.core.region_query import region_histogram
 
     def shard_fn(h_local, r):
         return region_histogram(h_local, r)
 
+    h_lead = H_sharded.ndim - 3
     return shard_map(
         shard_fn,
         mesh=mesh,
-        in_specs=(P(bin_axis, None, None), P()),
-        out_specs=P(*([None] * (rects.ndim - 1)), bin_axis),
+        in_specs=(P(*([None] * h_lead), bin_axis, None, None), P()),
+        out_specs=P(*([None] * (h_lead + rects.ndim - 1)), bin_axis),
         check_vma=False,
     )(H_sharded, rects)

@@ -4,8 +4,14 @@
 >>> H = ih(image)                          # (32, h, w)
 >>> Hs = ih(stack)                         # (n, 32, h, w) — one dispatch
 >>> hist = ih.query(H, [r0, c0, r1, c1])   # O(1) region histogram
+>>> hists = ih.query(Hs, rects)            # batched: (n, ..., 32)
+>>> wins = ih.sliding_windows(Hs, (24, 24))  # (n, n_r, n_c, 32), strided
+...                                          # slices — no gather
 >>> for H in ih.map_frames(video, batch_size=16):   # streaming throughput
 ...     ...
+
+The analytics statics are rank-polymorphic over leading frame axes (see
+core/region_query.py); results equal a per-frame loop bit-exactly.
 """
 
 from __future__ import annotations
@@ -17,12 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import region_query
+from repro.core.pipeline import auto_batch_size
 from repro.kernels.ops import integral_histogram as _compute
-
-# "auto" microbatching targets this per-dispatch output footprint — roughly
-# an LLC's worth, the crossover between dispatch-bound and cache-bound
-# regimes measured in benchmarks/bench_batched.py.
-_AUTO_BATCH_BYTES = 4 << 20
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,8 +101,7 @@ class IntegralHistogram:
                     f'batch_size must be an int or "auto", got {batch_size!r}'
                 )
             h, w = first.shape[-2:]
-            per_frame_bytes = 4 * self.num_bins * h * w
-            batch_size = max(1, min(16, _AUTO_BATCH_BYTES // per_frame_bytes))
+            batch_size = auto_batch_size(self.num_bins, h, w)
 
         executor = DoubleBufferedExecutor(
             self, depth=depth, device=device, batch_size=batch_size

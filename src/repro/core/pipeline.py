@@ -32,6 +32,37 @@ from typing import Callable, Iterable, Iterator
 import jax
 import numpy as np
 
+# "auto" microbatching targets this per-dispatch output footprint — roughly
+# an LLC's worth, the crossover between dispatch-bound and cache-bound
+# regimes measured in benchmarks/bench_batched.py.
+_AUTO_BATCH_BYTES = 4 << 20
+
+
+def stack_chunks(
+    frames: Iterable[np.ndarray], batch_size: int
+) -> Iterator[np.ndarray]:
+    """Group a frame stream into stacked (<= batch_size, ...) host arrays
+    (ragged final chunk included).  Shared by the executor's microbatching
+    and ``FragmentTracker.track``."""
+    buf: list = []
+    for frame in frames:
+        buf.append(np.asarray(frame))
+        if len(buf) == batch_size:
+            yield np.stack(buf)
+            buf = []
+    if buf:
+        yield np.stack(buf)
+
+
+def auto_batch_size(num_bins: int, h: int, w: int) -> int:
+    """Frames per dispatch from the per-frame (num_bins, h, w) fp32 H
+    footprint: ROI-scale frames are dispatch-bound and batch deep, full
+    frames are cache-bound and stay near 1 (the adaptive-batching idea of
+    Koppaka et al., arXiv:1011.0235, restated for XLA dispatch).  Shared
+    by ``IntegralHistogram.map_frames`` and ``FragmentTracker.track``."""
+    per_frame_bytes = 4 * num_bins * h * w
+    return max(1, min(16, _AUTO_BATCH_BYTES // per_frame_bytes))
+
 
 class DoubleBufferedExecutor:
     """Apply a jitted fn over a stream of host frames with dispatch-ahead.
@@ -64,14 +95,7 @@ class DoubleBufferedExecutor:
         if self.batch_size == 1:
             yield from frames
             return
-        buf: list = []
-        for frame in frames:
-            buf.append(frame)
-            if len(buf) == self.batch_size:
-                yield np.stack(buf)
-                buf = []
-        if buf:
-            yield np.stack(buf)
+        yield from stack_chunks(frames, self.batch_size)
 
     def _ready(self, out, is_batch: bool) -> Iterator[jax.Array]:
         out = jax.block_until_ready(out)              # ~ D2H sync point
@@ -104,13 +128,19 @@ class DoubleBufferedExecutor:
 def prefetch_to_device(
     frames: Iterable[np.ndarray], size: int = 2, device=None
 ) -> Iterator[jax.Array]:
-    """Stage host arrays onto the device `size` steps ahead of consumption
-    (training input pipeline building block; see data/prefetch.py)."""
+    """Stage host arrays onto the device ahead of consumption (training
+    input pipeline building block).  Exactly ``size`` frames are staged
+    before the first yield, and at most ``size`` frames are ever resident
+    beyond the one in the consumer's hands.  Device-memory commitment is
+    bounded by ``size``; for ``k`` transfers overlapping the consumer's
+    compute in steady state, pass ``size=k + 1``."""
     device = device or jax.devices()[0]
     queue: collections.deque = collections.deque()
     for frame in frames:
         queue.append(jax.device_put(frame, device))
-        if len(queue) > size:
+        # yield once exactly `size` frames are staged — `> size` would
+        # hold size + 1 frames on device before the first yield
+        if len(queue) >= size:
             yield queue.popleft()
     while queue:
         yield queue.popleft()

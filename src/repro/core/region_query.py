@@ -8,6 +8,26 @@ read as 0 (the virtual zero row/column of the inclusive integral image).
 Also implements the paper's headline use case: multi-scale exhaustive
 search — histograms of *every* sliding window extracted in constant time
 per window — and target likelihood maps for tracking/detection.
+
+Every entry point is rank-polymorphic over a frame-batch axis: an H of
+shape ``(b, h, w)`` queries one frame, ``(n, b, h, w)`` (or any stack of
+leading axes ``(..., b, h, w)``) queries every frame of the stack in ONE
+dispatch, bit-exact with a per-frame Python loop.  Rects/windows are
+shared across the frame axis; for per-frame rects, vmap
+``region_histogram`` over the frame axis.
+
+``sliding_window_histograms`` has two implementations:
+
+  * ``impl="slice"`` (default) — pure strided-slice four-corner
+    arithmetic: the regular window grid means every corner of every
+    window lives on a strided lattice, so the whole (n_rows, n_cols)
+    field of Eq.-2 queries is four slices of a zero-padded H combined
+    elementwise.  No gather, no index arrays — XLA lowers it to
+    contiguous strided loads.
+  * ``impl="gather"`` — one explicit Eq.-2 gather per window position
+    (the general path that also serves arbitrary ``rects`` via
+    ``region_histogram``); kept as the oracle for the slice path and for
+    benchmarking the difference (benchmarks/bench_analytics.py).
 """
 
 from __future__ import annotations
@@ -17,27 +37,33 @@ import jax.numpy as jnp
 
 
 def _corner(H: jnp.ndarray, r: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
-    """H[:, r, c] with r/c == -1 reading as 0.  r, c: broadcastable int arrays.
+    """H[..., :, r, c] with r/c == -1 reading as 0.
 
-    Returns shape (*r.shape, b).
+    H: (..., b, h, w); r, c: broadcastable int arrays (idx shape ``S``).
+    Returns shape (..., *S, b) — bins moved last for query ergonomics.
     """
-    rc = jnp.clip(r, 0, None)
-    cc = jnp.clip(c, 0, None)
-    # (b, h, w) -> gather -> (b, *idx); move bins last for query ergonomics.
-    vals = H[:, rc, cc]
+    r = jnp.asarray(r)
+    c = jnp.asarray(c)
+    rc, cc = jnp.broadcast_arrays(jnp.clip(r, 0, None), jnp.clip(c, 0, None))
+    # Advanced indices on the two trailing axes are adjacent, so the index
+    # dims land in place: (..., b, h, w) -> (..., b, *S).
+    vals = H[..., rc, cc]
+    if rc.ndim:
+        vals = jnp.moveaxis(vals, -(rc.ndim + 1), -1)        # (..., *S, b)
     valid = ((r >= 0) & (c >= 0)).astype(H.dtype)
-    return jnp.moveaxis(vals, 0, -1) * valid[..., None]
+    return vals * valid[..., None]
 
 
 def region_histogram(H: jnp.ndarray, rects: jnp.ndarray) -> jnp.ndarray:
     """Histograms of inclusive regions.
 
     Args:
-      H: (b, h, w) integral histogram.
-      rects: (..., 4) int32 [r0, c0, r1, c1], inclusive coordinates.
+      H: (b, h, w) integral histogram, or a stack (..., b, h, w).
+      rects: (..., 4) int32 [r0, c0, r1, c1], inclusive coordinates,
+        shared across any leading frame axes of H.
 
     Returns:
-      (..., b) region histograms.
+      (*H_lead, *rects_lead, b) region histograms.
     """
     r0, c0, r1, c1 = (rects[..., i] for i in range(4))
     return (
@@ -48,15 +74,11 @@ def region_histogram(H: jnp.ndarray, rects: jnp.ndarray) -> jnp.ndarray:
     )
 
 
-def sliding_window_histograms(
-    H: jnp.ndarray, window: tuple[int, int], stride: int = 1
+def _sliding_windows_gather(
+    H: jnp.ndarray, window: tuple[int, int], stride: int
 ) -> jnp.ndarray:
-    """Histograms of every (wh, ww) window at the given stride.
-
-    Returns (n_rows, n_cols, b) — one O(1) query per window position; this
-    is the constant-time multi-scale exhaustive search of the paper.
-    """
-    _, h, w = H.shape
+    """One Eq.-2 gather per window position (the original path)."""
+    h, w = H.shape[-2:]
     wh, ww = window
     rows = jnp.arange(0, h - wh + 1, stride)
     cols = jnp.arange(0, w - ww + 1, stride)
@@ -68,6 +90,95 @@ def sliding_window_histograms(
     return region_histogram(H, rects)
 
 
+def _sliding_windows_slice(
+    H: jnp.ndarray, window: tuple[int, int], stride: int
+) -> jnp.ndarray:
+    """Strided-slice four-corner arithmetic over the regular window grid.
+
+    The window lattice r0 = i·s, c0 = j·s puts all four Eq.-2 corners of
+    every window on strided slices of H itself:
+
+      bottom-right  H[wh-1 + i·s, ww-1 + j·s]   ->  H[wh-1::s, ww-1::s]
+      top-right     H[i·s - 1,    ww-1 + j·s]   ->  H[s-1::s,  ww-1::s]
+                                                    shifted down one row,
+                                                    zero row prepended
+      (and symmetrically for the left corners)
+
+    The virtual H(-1, ·) = H(·, -1) = 0 boundary becomes a one-element
+    zero strip concatenated onto the (already window-grid-sized) corner
+    slices — nothing the size of H is ever copied, no index arrays are
+    built, and XLA fuses the concatenates, the four-term combination and
+    the final bins-last transpose into a single elementwise loop over
+    contiguous strided loads.
+    """
+    h, w = H.shape[-2:]
+    wh, ww = window
+    n_r = (h - wh) // stride + 1
+    n_c = (w - ww) // stride + 1
+
+    def zrow(x):  # prepend the virtual zero row (window row i = 0)
+        z = jnp.zeros(x.shape[:-2] + (1,) + x.shape[-1:], x.dtype)
+        return jnp.concatenate([z, x], axis=-2)
+
+    def zcol(x):  # prepend the virtual zero column (window col j = 0)
+        z = jnp.zeros(x.shape[:-1] + (1,), x.dtype)
+        return jnp.concatenate([z, x], axis=-1)
+
+    s = stride
+    d = H[..., wh - 1 :: s, ww - 1 :: s][..., :n_r, :n_c]
+    b = zrow(H[..., s - 1 :: s, ww - 1 :: s][..., : n_r - 1, :n_c])
+    c = zcol(H[..., wh - 1 :: s, s - 1 :: s][..., :n_r, : n_c - 1])
+    a = zrow(zcol(H[..., s - 1 :: s, s - 1 :: s][..., : n_r - 1, : n_c - 1]))
+    # Same association order as the gather path (d - b - c + a) so the
+    # fp32 arithmetic is bit-identical, not just allclose.
+    return jnp.moveaxis(d - b - c + a, -3, -1)       # (..., n_r, n_c, b)
+
+
+def sliding_window_histograms(
+    H: jnp.ndarray,
+    window: tuple[int, int],
+    stride: int = 1,
+    *,
+    impl: str = "slice",
+) -> jnp.ndarray:
+    """Histograms of every (wh, ww) window at the given stride.
+
+    Returns (..., n_rows, n_cols, b) — one O(1) query per window position
+    and frame; this is the constant-time multi-scale exhaustive search of
+    the paper.  ``impl`` selects the strided-slice path (default) or the
+    explicit per-window gather (see module docstring); both are bit-exact.
+    """
+    if impl not in ("slice", "gather"):
+        raise ValueError(f"unknown impl {impl!r} (want 'slice' or 'gather')")
+    h, w = H.shape[-2:]
+    n_r = (h - window[0]) // stride + 1
+    n_c = (w - window[1]) // stride + 1
+    if n_r <= 0 or n_c <= 0:
+        # window larger than the frame on some axis: no positions
+        return jnp.zeros(
+            H.shape[:-3] + (max(n_r, 0), max(n_c, 0), H.shape[-3]), H.dtype
+        )
+    if impl == "slice":
+        return _sliding_windows_slice(H, window, stride)
+    return _sliding_windows_gather(H, window, stride)
+
+
+def likelihood_map(H: jnp.ndarray, target_hist: jnp.ndarray,
+                   window: tuple[int, int], metric, stride: int = 1):
+    """Feature likelihood map (abstract, ¶1): per-position similarity of the
+    window histogram to the target histogram.
+
+    ``target_hist`` is (b,) — one target for all frames — or carries the
+    same leading frame axes as H (e.g. (n, b) against an (n, b, h, w)
+    stack: one target per frame, broadcast over window positions).
+    Returns (..., n_rows, n_cols).
+    """
+    hists = sliding_window_histograms(H, window, stride)
+    if target_hist.ndim > 1:
+        target_hist = target_hist[..., None, None, :]
+    return metric(hists, target_hist)
+
+
 def multi_scale_search(
     H: jnp.ndarray,
     target_hist: jnp.ndarray,
@@ -75,31 +186,32 @@ def multi_scale_search(
     metric,
     stride: int = 1,
 ):
-    """Best-matching window across scales.
+    """Best-matching window across scales, per frame.
 
-    Returns (best_rect[4], best_score, per_scale_maps) where ``metric`` is a
-    similarity (higher = better) from core/distances.py.
+    Returns (best_rect, best_score, per_scale_maps) where ``metric`` is a
+    similarity (higher = better) from core/distances.py.  For an H stack
+    (..., b, h, w) the rects are (..., 4) and scores (...,) — the argmax
+    runs independently per frame, matching a per-frame loop bit-exactly.
     """
-    best_rect = jnp.zeros((4,), jnp.int32)
-    best_score = -jnp.inf
+    lead = H.shape[:-3]
+    best_rect = jnp.zeros(lead + (4,), jnp.int32)
+    best_score = jnp.full(lead, -jnp.inf)
     maps = []
     for wh, ww in windows:
-        hists = sliding_window_histograms(H, (wh, ww), stride)
-        scores = metric(hists, target_hist)          # (n_rows, n_cols)
+        scores = likelihood_map(H, target_hist, (wh, ww), metric, stride)
         maps.append(scores)
-        idx = jnp.argmax(scores)
-        r, c = jnp.unravel_index(idx, scores.shape)
-        r0, c0 = r * stride, c * stride
-        rect = jnp.array([r0, c0, r0 + wh - 1, c0 + ww - 1], jnp.int32)
-        score = scores.reshape(-1)[idx]
-        best_rect = jnp.where(score > best_score, rect, best_rect)
+        if scores.shape[-2] == 0 or scores.shape[-1] == 0:
+            continue                # window exceeds the frame at this scale
+        flat = scores.reshape(lead + (-1,))
+        idx = jnp.argmax(flat, axis=-1)
+        score = jnp.take_along_axis(flat, idx[..., None], axis=-1)[..., 0]
+        n_cols = scores.shape[-1]
+        r0 = (idx // n_cols) * stride
+        c0 = (idx % n_cols) * stride
+        rect = jnp.stack(
+            [r0, c0, r0 + wh - 1, c0 + ww - 1], axis=-1
+        ).astype(jnp.int32)
+        better = score > best_score
+        best_rect = jnp.where(better[..., None], rect, best_rect)
         best_score = jnp.maximum(score, best_score)
     return best_rect, best_score, maps
-
-
-def likelihood_map(H: jnp.ndarray, target_hist: jnp.ndarray,
-                   window: tuple[int, int], metric, stride: int = 1):
-    """Feature likelihood map (abstract, ¶1): per-position similarity of the
-    window histogram to the target histogram."""
-    hists = sliding_window_histograms(H, window, stride)
-    return metric(hists, target_hist)

@@ -7,6 +7,18 @@ candidate windows — all candidate histograms come from the frame's
 integral histogram in O(1) each, which is what makes exhaustive local
 search real-time.
 
+The tracker is batched along two axes:
+
+  * **targets** — ``init`` accepts a single ``(4,)`` bbox or a ``(t, 4)``
+    stack; multi-target state is vmapped through every step against the
+    *shared* per-frame H (the H is computed once regardless of target
+    count — the whole point of the integral histogram).
+  * **frames** — ``track`` consumes a whole clip: frames are chunked,
+    each chunk's integral histograms come from ONE batched
+    ``integral_histogram`` dispatch (PR 1's ``(n, h, w)`` kernel path),
+    and a ``lax.scan`` threads the tracker state through the chunk
+    on-device.  Results are bit-exact with a per-frame ``step`` loop.
+
 This is a deliberately compact but fully functional tracker used by
 examples/video_analytics.py and the integration tests.
 """
@@ -15,11 +27,15 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import itertools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax import lax
 
 from repro.core import distances
+from repro.core.pipeline import auto_batch_size, stack_chunks
 from repro.core.region_query import region_histogram
 from repro.kernels.ops import integral_histogram
 
@@ -31,6 +47,18 @@ class TrackerConfig:
     search_radius: int = 12                 # candidate offsets per axis
     method: str = "wf_tis"
     backend: str = "jnp"                    # "pallas" on TPU
+
+
+def _clamp_bbox(bbox: jnp.ndarray, h: int, w: int) -> jnp.ndarray:
+    """Clamp [r0, c0, r1, c1] (inclusive) fully inside an (h, w) frame.
+
+    A bbox taller/wider than the frame collapses to the frame edge rather
+    than escaping it (which used to poison the step clip bounds)."""
+    r0 = jnp.clip(bbox[..., 0], 0, h - 1)
+    c0 = jnp.clip(bbox[..., 1], 0, w - 1)
+    r1 = jnp.clip(bbox[..., 2], r0, h - 1)
+    c1 = jnp.clip(bbox[..., 3], c0, w - 1)
+    return jnp.stack([r0, c0, r1, c1], axis=-1)
 
 
 def _fragment_rects(bbox: jnp.ndarray, grid: tuple[int, int]) -> jnp.ndarray:
@@ -48,31 +76,143 @@ def _fragment_rects(bbox: jnp.ndarray, grid: tuple[int, int]) -> jnp.ndarray:
 
 
 class FragmentTracker:
-    """Track a template bbox across frames via fragment histogram voting."""
+    """Track template bbox(es) across frames via fragment histogram voting.
+
+    State is a dict {"bbox", "ref_hists", "frag_offsets"}; every field
+    grows a leading target axis when ``init`` is given ``(t, 4)`` bboxes.
+    """
 
     def __init__(self, config: TrackerConfig = TrackerConfig()):
         self.config = config
 
-    def init(self, frame: jnp.ndarray, bbox) -> dict:
-        """bbox: [r0, c0, r1, c1] inclusive."""
+    # -- H computation (shared by init/step/track) --------------------------
+    def _compute_h(self, frames: jnp.ndarray) -> jnp.ndarray:
         cfg = self.config
-        bbox = jnp.asarray(bbox, jnp.int32)
-        H = integral_histogram(
-            frame, cfg.num_bins, method=cfg.method, backend=cfg.backend
+        return integral_histogram(
+            frames, cfg.num_bins, method=cfg.method, backend=cfg.backend
         )
-        frag_rects = _fragment_rects(bbox, cfg.fragments)
-        ref_hists = region_histogram(H, frag_rects)
+
+    # -- public -------------------------------------------------------------
+    def init(self, frame: jnp.ndarray, bbox) -> dict:
+        """bbox: [r0, c0, r1, c1] inclusive — (4,) or (t, 4) for t targets.
+
+        The bbox is clamped fully inside the frame (an out-of-frame or
+        oversized template has no pixels to describe)."""
+        cfg = self.config
+        h, w = frame.shape[-2:]
+        bbox = _clamp_bbox(jnp.asarray(bbox, jnp.int32), h, w)
+        H = self._compute_h(frame)
+        if bbox.ndim == 1:
+            frag_rects = _fragment_rects(bbox, cfg.fragments)
+            frag_offsets = frag_rects - bbox[None, :]
+        else:
+            frag_rects = jax.vmap(
+                lambda b: _fragment_rects(b, cfg.fragments)
+            )(bbox)                                          # (t, f, 4)
+            frag_offsets = frag_rects - bbox[:, None, :]
+        ref_hists = region_histogram(H, frag_rects)          # ([t,] f, b)
         return {"bbox": bbox, "ref_hists": ref_hists,
-                "frag_offsets": frag_rects - bbox[None, :]}
+                "frag_offsets": frag_offsets}
+
+    def step(self, state: dict, frame: jnp.ndarray) -> dict:
+        """Advance one frame (computes this frame's H, then votes)."""
+        return self.step_on_h(state, self._compute_h(frame))
 
     @functools.partial(jax.jit, static_argnums=(0,))
-    def step(self, state: dict, frame: jnp.ndarray) -> dict:
+    def step_on_h(self, state: dict, H: jnp.ndarray) -> dict:
+        """Advance one frame given its precomputed (b, h, w) H — the hook
+        for pipelines that already stream integral histograms
+        (``IntegralHistogram.map_frames``)."""
+        return self._step_state(state, H)
+
+    def track(self, state: dict, frames, *, batch_size: int | str = "auto"):
+        """Track through a whole clip.
+
+        Args:
+          state: tracker state from ``init``.
+          frames: (n, h, w) array or any iterable of (h, w) frames.
+          batch_size: frames per batched H dispatch (the chunk that one
+            ``lax.scan`` consumes on-device).  ``"auto"`` sizes the chunk
+            from the per-frame H footprint, exactly like
+            ``IntegralHistogram.map_frames``.  A ragged final chunk costs
+            one extra compile, like ``DoubleBufferedExecutor``.
+
+        Returns:
+          (final_state, boxes) with boxes (n, [t,] 4) — the bbox *after*
+          each frame's update, bit-exact vs a per-frame ``step`` loop.
+        """
+        if batch_size != "auto" and (
+            not isinstance(batch_size, int) or batch_size < 1
+        ):
+            raise ValueError(
+                f'batch_size must be a positive int or "auto", '
+                f"got {batch_size!r}")
+
+        def empty():
+            return state, jnp.zeros((0,) + state["bbox"].shape, jnp.int32)
+
+        if hasattr(frames, "shape"):
+            # Array clip (host or device): chunk by slicing — no per-frame
+            # host round-trip, device arrays stay on device.
+            if frames.ndim != 3:
+                raise ValueError(
+                    f"track expects an (n, h, w) clip, got {frames.shape}; "
+                    "use step() for a single frame")
+            if frames.shape[0] == 0:
+                return empty()
+            if batch_size == "auto":
+                batch_size = auto_batch_size(
+                    self.config.num_bins, *frames.shape[-2:])
+            chunks = (
+                frames[s : s + batch_size]
+                for s in range(0, frames.shape[0], batch_size)
+            )
+        else:
+            it = iter(frames)
+            if batch_size == "auto":
+                try:
+                    first = np.asarray(next(it))
+                except StopIteration:
+                    return empty()
+                batch_size = auto_batch_size(
+                    self.config.num_bins, *first.shape[-2:])
+                it = itertools.chain([first], it)
+            chunks = stack_chunks(it, batch_size)
+
+        boxes = []
+        for stack in chunks:
+            state, chunk_boxes = self._track_chunk(state, jnp.asarray(stack))
+            boxes.append(chunk_boxes)
+        if not boxes:
+            return empty()
+        return state, jnp.concatenate(boxes, axis=0)
+
+    # -- internals ----------------------------------------------------------
+    @functools.partial(jax.jit, static_argnums=(0,))
+    def _track_chunk(self, state: dict, frames: jnp.ndarray):
+        Hs = self._compute_h(frames)                 # (k, b, h, w), 1 dispatch
+
+        def body(st, H):
+            st = self._step_state(st, H)
+            return st, st["bbox"]
+
+        return lax.scan(body, state, Hs)
+
+    def _step_state(self, state: dict, H: jnp.ndarray) -> dict:
+        if state["bbox"].ndim == 1:
+            new_bbox = self._vote(H, state["bbox"], state["ref_hists"],
+                                  state["frag_offsets"])
+        else:
+            new_bbox = jax.vmap(
+                lambda b, r, o: self._vote(H, b, r, o)
+            )(state["bbox"], state["ref_hists"], state["frag_offsets"])
+        return {"bbox": new_bbox, "ref_hists": state["ref_hists"],
+                "frag_offsets": state["frag_offsets"]}
+
+    def _vote(self, H, bbox, ref_hists, frag_offsets) -> jnp.ndarray:
+        """Single-target candidate search on one frame's H."""
         cfg = self.config
-        H = integral_histogram(
-            frame, cfg.num_bins, method=cfg.method, backend=cfg.backend
-        )
-        h, w = frame.shape
-        bbox = state["bbox"]
+        h, w = H.shape[-2:]
         rad = cfg.search_radius
         dr = jnp.arange(-rad, rad + 1)
         dc = jnp.arange(-rad, rad + 1)
@@ -80,19 +220,18 @@ class FragmentTracker:
         offsets = jnp.stack([drr, dcc, drr, dcc], axis=-1).reshape(-1, 4)
 
         cand = bbox[None, :] + offsets                       # (n_cand, 4)
-        # clamp candidates fully inside the frame
+        # clamp candidates fully inside the frame; the upper clip bound is
+        # floored at 0 so a template as large as the frame pins to the
+        # origin instead of producing negative rects
         bh = bbox[2] - bbox[0]
         bw = bbox[3] - bbox[1]
-        r0 = jnp.clip(cand[:, 0], 0, h - 1 - bh)
-        c0 = jnp.clip(cand[:, 1], 0, w - 1 - bw)
+        r0 = jnp.clip(cand[:, 0], 0, jnp.maximum(h - 1 - bh, 0))
+        c0 = jnp.clip(cand[:, 1], 0, jnp.maximum(w - 1 - bw, 0))
         cand = jnp.stack([r0, c0, r0 + bh, c0 + bw], axis=-1)
 
         # score every candidate by median fragment similarity (robust vote)
-        frag = cand[:, None, :] + state["frag_offsets"][None, :, :]  # (n,f,4)
+        frag = cand[:, None, :] + frag_offsets[None, :, :]   # (n, f, 4)
         hists = region_histogram(H, frag)                    # (n, f, b)
-        sims = distances.intersection(hists, state["ref_hists"][None])
+        sims = distances.intersection(hists, ref_hists[None])
         scores = jnp.median(sims, axis=-1)                   # (n,)
-        best = jnp.argmax(scores)
-        new_bbox = cand[best]
-        return {"bbox": new_bbox, "ref_hists": state["ref_hists"],
-                "frag_offsets": state["frag_offsets"]}
+        return cand[jnp.argmax(scores)]

@@ -73,12 +73,23 @@ def integral_histogram(
     """Inclusive integral histogram of a frame or an (n, h, w) frame stack."""
     if image.ndim not in (2, 3):
         raise ValueError(f"expected (h, w) or (n, h, w), got {image.shape}")
+    if backend not in ("auto", "pallas", "jnp"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if method not in scans.METHODS:
+        raise ValueError(f"unknown method {method!r}")
+    if backend == "pallas" and method not in PALLAS_METHODS:
+        # An explicit backend request must not silently degrade: only
+        # "auto" may fall back to the jnp scans.
+        raise ValueError(
+            f"method {method!r} has no Pallas kernel (Pallas methods: "
+            f"{sorted(PALLAS_METHODS)}); use backend='auto' or 'jnp'"
+        )
     if backend == "auto":
-        backend = "pallas" if _on_tpu() else "jnp"
+        backend = (
+            "pallas" if _on_tpu() and method in PALLAS_METHODS else "jnp"
+        )
 
-    if backend == "jnp" or method not in PALLAS_METHODS:
-        if method not in scans.METHODS:
-            raise ValueError(f"unknown method {method!r}")
+    if backend == "jnp":
         kw = {} if method in ("cw_b", "cw_sts") else {"tile": tile}
         return scans.METHODS[method](image, num_bins, value_range, **kw)
 

@@ -1,0 +1,277 @@
+"""Batched O(1) analytics + the five audited-bug regressions.
+
+Property tests: every analytics entry point accepts (n, b, h, w) H stacks
+bit-exactly equal to a per-frame Python loop; the strided-slice sliding
+windows match the gather path bit-exactly; the batched multi-target
+tracker matches per-target and per-frame loops bit-exactly.
+
+Regression tests (each fails on the pre-PR code):
+  * bhattacharyya stays in [0, 1] — no per-empty-bin sqrt(eps) bias
+  * tracker bboxes never leave the frame, even for oversized templates
+  * explicit backend="pallas" with a non-Pallas method raises (only
+    backend="auto" may fall back to the jnp scans)
+  * prefetch_to_device stages exactly `size` frames ahead, not size + 1
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import distances
+from repro.core.pipeline import prefetch_to_device
+from repro.core.region_query import (
+    likelihood_map, multi_scale_search, region_histogram,
+    sliding_window_histograms,
+)
+from repro.core.tracking import FragmentTracker, TrackerConfig
+from repro.kernels.ops import integral_histogram
+from repro.kernels.ref import integral_histogram_ref
+
+
+def _h_stack(rng, n=3, h=24, w=30, bins=8):
+    imgs = rng.integers(0, 256, (n, h, w), dtype=np.uint8)
+    return jnp.stack(
+        [integral_histogram_ref(jnp.asarray(im), bins) for im in imgs]
+    )
+
+
+# ---------------------------------------------------------------------------
+# rank-polymorphic queries: (n, b, h, w) == per-frame loop, bit-exact
+# ---------------------------------------------------------------------------
+def test_batched_region_histogram_equals_loop(rng):
+    Hs = _h_stack(rng)
+    rects = jnp.array([[0, 0, 23, 29], [2, 3, 10, 12], [5, 5, 5, 5]])
+    batched = region_histogram(Hs, rects)
+    loop = jnp.stack([region_histogram(Hs[i], rects) for i in range(3)])
+    assert batched.shape == (3, 3, 8)
+    np.testing.assert_array_equal(np.asarray(batched), np.asarray(loop))
+    # scalar rect keeps working, batched and single
+    one = region_histogram(Hs, jnp.array([1, 2, 9, 11]))
+    assert one.shape == (3, 8)
+    np.testing.assert_array_equal(
+        np.asarray(one[1]),
+        np.asarray(region_histogram(Hs[1], jnp.array([1, 2, 9, 11]))))
+
+
+@pytest.mark.parametrize("window,stride", [
+    ((8, 10), 1), ((8, 10), 3), ((24, 30), 1), ((1, 1), 5), ((3, 7), 4),
+])
+def test_sliding_windows_slice_matches_gather(rng, window, stride):
+    Hs = _h_stack(rng)
+    sl = sliding_window_histograms(Hs, window, stride)
+    ga = sliding_window_histograms(Hs, window, stride, impl="gather")
+    np.testing.assert_array_equal(np.asarray(sl), np.asarray(ga))
+    loop = jnp.stack([
+        sliding_window_histograms(Hs[i], window, stride) for i in range(3)
+    ])
+    np.testing.assert_array_equal(np.asarray(sl), np.asarray(loop))
+    # every window histogram sums to the window area
+    np.testing.assert_array_equal(
+        np.asarray(jnp.sum(sl, -1)), float(window[0] * window[1]))
+
+
+def test_sliding_windows_oversized_window_is_empty(rng):
+    """A window larger than the frame has no positions: both impls must
+    return the same empty result instead of the slice path crashing."""
+    Hs = _h_stack(rng)                       # frames are 24x30
+    for impl in ("slice", "gather"):
+        assert sliding_window_histograms(
+            Hs, (30, 10), 2, impl=impl).shape == (3, 0, 11, 8)
+        assert sliding_window_histograms(
+            Hs[0], (30, 40), 1, impl=impl).shape == (0, 0, 8)
+
+
+def test_sliding_windows_unknown_impl_raises(rng):
+    with pytest.raises(ValueError, match="impl"):
+        sliding_window_histograms(_h_stack(rng)[0], (4, 4), impl="scatter")
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    wh=st.integers(1, 20), ww=st.integers(1, 24),
+    stride=st.integers(1, 5),
+)
+def test_property_slice_equals_gather(seed, wh, ww, stride):
+    """The strided-slice path is the gather path, bit for bit."""
+    r = np.random.default_rng(seed)
+    img = r.integers(0, 256, (20, 24), dtype=np.uint8)
+    H = integral_histogram_ref(jnp.asarray(img), 4)
+    sl = sliding_window_histograms(H, (wh, ww), stride)
+    ga = sliding_window_histograms(H, (wh, ww), stride, impl="gather")
+    np.testing.assert_array_equal(np.asarray(sl), np.asarray(ga))
+
+
+def test_batched_likelihood_map_and_search(rng):
+    Hs = _h_stack(rng)
+    shared = region_histogram(Hs[0], jnp.array([0, 0, 7, 9]))
+    per_frame = region_histogram(Hs, jnp.array([0, 0, 7, 9]))    # (3, 8)
+    for target in (shared, per_frame):
+        got = likelihood_map(Hs, target, (8, 10), distances.intersection, 2)
+        want = jnp.stack([
+            likelihood_map(Hs[i], target if target.ndim == 1 else target[i],
+                           (8, 10), distances.intersection, 2)
+            for i in range(3)
+        ])
+        assert got.shape == (3, 9, 11)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    rect, score, maps = multi_scale_search(
+        Hs, shared, ((8, 10), (6, 6)), distances.intersection, stride=2)
+    assert rect.shape == (3, 4) and score.shape == (3,)
+    # an oversized scale contributes an empty map but must not crash
+    rect_o, score_o, maps_o = multi_scale_search(
+        Hs, shared, ((8, 10), (30, 40)), distances.intersection, stride=2)
+    assert maps_o[1].shape[-2:] == (0, 0)
+    np.testing.assert_array_equal(np.asarray(rect_o[..., 2] - rect_o[..., 0]),
+                                  7)        # best rect from the valid scale
+    for i in range(3):
+        r1, s1, m1 = multi_scale_search(
+            Hs[i], shared, ((8, 10), (6, 6)), distances.intersection, 2)
+        np.testing.assert_array_equal(np.asarray(rect[i]), np.asarray(r1))
+        np.testing.assert_array_equal(np.asarray(score[i]), np.asarray(s1))
+        for mb, ms in zip(maps, m1):
+            np.testing.assert_array_equal(np.asarray(mb[i]), np.asarray(ms))
+
+
+# ---------------------------------------------------------------------------
+# batched tracker: multi-target == per-target, track() == step loop
+# ---------------------------------------------------------------------------
+def _blob_frames(n=5):
+    base = (10 * np.random.default_rng(0).random((64, 64))).astype(np.uint8)
+    yy, xx = np.mgrid[0:64, 0:64]
+
+    def frame(t):
+        b1 = 220 * np.exp(-((yy - 24 - 2 * t) ** 2 + (xx - 20 - t) ** 2) / 40.0)
+        b2 = 140 * np.exp(-((yy - 44 + t) ** 2 + (xx - 44 - t) ** 2) / 40.0)
+        return np.clip(base + b1 + b2, 0, 255).astype(np.uint8)
+
+    return [frame(t) for t in range(n)]
+
+
+@pytest.fixture(scope="module")
+def tracker():
+    return FragmentTracker(TrackerConfig(num_bins=8, search_radius=5))
+
+
+def test_multi_target_equals_single_target_loop(tracker):
+    frames = _blob_frames()
+    bboxes = [[18, 14, 29, 25], [38, 38, 49, 49]]
+    mstate = tracker.init(jnp.asarray(frames[0]), bboxes)
+    sstates = [tracker.init(jnp.asarray(frames[0]), b) for b in bboxes]
+    assert mstate["bbox"].shape == (2, 4)
+    for f in frames[1:]:
+        mstate = tracker.step(mstate, jnp.asarray(f))
+        sstates = [tracker.step(s, jnp.asarray(f)) for s in sstates]
+    np.testing.assert_array_equal(
+        np.asarray(mstate["bbox"]),
+        np.stack([np.asarray(s["bbox"]) for s in sstates]))
+
+
+@pytest.mark.parametrize("bbox", [
+    [18, 14, 29, 25],                       # single target
+    [[18, 14, 29, 25], [38, 38, 49, 49]],   # two targets
+])
+def test_track_clip_equals_step_loop(tracker, bbox):
+    frames = _blob_frames()
+    st0 = tracker.init(jnp.asarray(frames[0]), bbox)
+    # batch_size=3 leaves a ragged 3+1 tail on the 4-frame clip
+    final, boxes = tracker.track(st0, frames[1:], batch_size=3)
+    st = tracker.init(jnp.asarray(frames[0]), bbox)
+    want = []
+    for f in frames[1:]:
+        st = tracker.step(st, jnp.asarray(f))
+        want.append(np.asarray(st["bbox"]))
+    np.testing.assert_array_equal(np.asarray(boxes), np.stack(want))
+    np.testing.assert_array_equal(
+        np.asarray(final["bbox"]), np.asarray(st["bbox"]))
+
+
+def test_track_auto_batch_and_empty_clip(tracker):
+    frames = _blob_frames()
+    st0 = tracker.init(jnp.asarray(frames[0]), [18, 14, 29, 25])
+    _, auto_boxes = tracker.track(st0, frames[1:])          # "auto"
+    _, one_boxes = tracker.track(st0, frames[1:], batch_size=1)
+    np.testing.assert_array_equal(np.asarray(auto_boxes), np.asarray(one_boxes))
+    _, empty = tracker.track(st0, [])
+    assert empty.shape == (0, 4)
+    _, empty_auto = tracker.track(st0, iter([]))
+    assert empty_auto.shape == (0, 4)
+    with pytest.raises(ValueError, match="batch_size"):
+        tracker.track(st0, frames[1:], batch_size=0)
+    with pytest.raises(ValueError, match=r"\(n, h, w\) clip"):
+        tracker.track(st0, jnp.asarray(frames[1]))      # single 2-D frame
+    # device-array clips go through the slicing path, bit-exact with lists
+    _, from_list = tracker.track(st0, frames[1:], batch_size=2)
+    _, from_array = tracker.track(
+        st0, jnp.asarray(np.stack(frames[1:])), batch_size=2)
+    np.testing.assert_array_equal(np.asarray(from_list), np.asarray(from_array))
+
+
+# ---------------------------------------------------------------------------
+# regression: the five audited bugs
+# ---------------------------------------------------------------------------
+def test_bhattacharyya_bounded():
+    """Empty bins must not contribute sqrt(eps): identical-support
+    histograms score exactly ~1, disjoint-support exactly ~0, at any bin
+    count (the old eps-inside-sqrt scored 1.0127 and 0.0128 at 128)."""
+    h = np.zeros(128); h[3] = 5.0; h[70] = 2.0
+    g = np.zeros(128); g[10] = 4.0
+    same = float(distances.bhattacharyya(jnp.asarray(h), jnp.asarray(h)))
+    disj = float(distances.bhattacharyya(jnp.asarray(h), jnp.asarray(g)))
+    assert same <= 1.0 + 1e-6
+    assert same == pytest.approx(1.0, abs=1e-5)
+    assert 0.0 <= disj < 1e-6
+
+
+def test_tracker_bbox_never_leaves_frame(tracker):
+    frames = _blob_frames()
+    # a template larger than the frame used to clamp to negative bounds
+    # and emit candidate rects like [-3, -3, 15, 15]
+    state = tracker.init(jnp.asarray(frames[0]), [-5, -5, 200, 200])
+    b = np.asarray(state["bbox"])
+    assert (b == [0, 0, 63, 63]).all()
+    for f in frames[1:3]:
+        state = tracker.step(state, jnp.asarray(f))
+        b = np.asarray(state["bbox"])
+        assert (b[:2] >= 0).all() and b[2] <= 63 and b[3] <= 63
+    # a border-hugging target stays clamped inside as well
+    state = tracker.init(jnp.asarray(frames[0]), [56, 56, 63, 63])
+    for f in frames[1:3]:
+        state = tracker.step(state, jnp.asarray(f))
+        b = np.asarray(state["bbox"])
+        assert (b[:2] >= 0).all() and b[2] <= 63 and b[3] <= 63
+
+
+@pytest.mark.parametrize("method", ["cw_b", "cw_sts"])
+def test_explicit_pallas_backend_raises_for_cross_weave(rng, method):
+    img = jnp.asarray(rng.integers(0, 256, (16, 16), dtype=np.uint8))
+    with pytest.raises(ValueError, match="no Pallas kernel"):
+        integral_histogram(img, 4, method=method, backend="pallas")
+    # backend="auto" may still fall back to the jnp scans silently
+    out = integral_histogram(img, 4, method=method, backend="auto")
+    assert out.shape == (4, 16, 16)
+    with pytest.raises(ValueError, match="backend"):
+        integral_histogram(img, 4, backend="cuda")
+
+
+def test_prefetch_stages_exactly_size():
+    pulled = []
+
+    def gen(n=6):
+        for i in range(n):
+            pulled.append(i)
+            yield np.full((2, 2), i, np.float32)
+
+    it = prefetch_to_device(gen(), size=2)
+    first = next(it)
+    assert pulled == [0, 1]          # pre-fix: [0, 1, 2] (size + 1 staged)
+    got = [int(first[0, 0])] + [int(a[0, 0]) for a in it]
+    assert got == list(range(6))
+
+    pulled.clear()
+    it = prefetch_to_device(gen(4), size=1)
+    next(it)
+    assert pulled == [0]
+    assert len(list(it)) == 3

@@ -43,6 +43,24 @@ def test_distributed_integral_histograms():
             spatial_sharded_ih(img, 16, mesh, scan_impl="ppermute"), ref)
         assert np.allclose(
             spatial_sharded_ih(img, 16, mesh, bin_axis="model"), ref)
+
+        # batched analytics over the sharded H: (n, h, w) frame stacks and
+        # rank-polymorphic distributed_region_query
+        from repro.core.distributed import distributed_region_query
+        from repro.core.region_query import region_histogram
+        imgs = jnp.asarray(np.random.default_rng(2).integers(
+            0, 256, (2, 64, 128), dtype=np.uint8))
+        refs = jnp.stack([integral_histogram_ref(im, 16) for im in imgs])
+        Hs = bin_sharded_ih(imgs, 16, mesh)
+        assert Hs.shape == (2, 16, 64, 128)
+        assert np.allclose(Hs, refs)
+        rects = jnp.array([[0, 0, 63, 127], [3, 4, 30, 40]])
+        got = distributed_region_query(Hs, rects, mesh)
+        assert got.shape == (2, 2, 16)
+        assert np.allclose(got, region_histogram(refs, rects))
+        # unbatched query unchanged
+        got1 = distributed_region_query(Hs[0], rects, mesh)
+        assert np.allclose(got1, region_histogram(refs[0], rects))
         print("dist-IH OK")
     """)
     assert "dist-IH OK" in out
