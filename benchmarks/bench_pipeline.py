@@ -10,7 +10,6 @@ import functools
 import time
 
 import jax
-import numpy as np
 
 from benchmarks.common import fmt_table
 from repro.core.pipeline import DoubleBufferedExecutor

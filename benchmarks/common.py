@@ -16,9 +16,19 @@ import numpy as np
 # burning CI minutes on stable medians.
 SMOKE = False
 
+# Every time_fn result is appended here, in call order.  benchmarks.run
+# snapshots the list around each bench to key records by bench name and
+# serialize them with --json (the CI perf-trajectory artifact).
+TIMINGS: list = []
 
-def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> dict:
-    """Median wall time of a jitted callable (blocks on results)."""
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5,
+            label: str | None = None) -> dict:
+    """Median wall time of a jitted callable (blocks on results).
+
+    ``label`` tags the record in the --json artifact (optional; records
+    are ordered regardless).
+    """
     if SMOKE:
         warmup, iters = 0, 1
     for _ in range(warmup):
@@ -30,9 +40,12 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> dict:
         out = fn(*args)
         jax.block_until_ready(out)
         ts.append(time.perf_counter() - t0)
-    return {"median_s": float(np.median(ts)),
-            "min_s": float(np.min(ts)),
-            "iters": iters}
+    record = {"median_s": float(np.median(ts)),
+              "min_s": float(np.min(ts)),
+              "iters": iters,
+              "label": label}
+    TIMINGS.append(record)
+    return record
 
 
 def fmt_table(headers, rows) -> str:

@@ -1,13 +1,19 @@
 """Benchmark driver: one bench per paper table/figure + the roofline
-aggregation.  `python -m benchmarks.run [--quick|--smoke] [--only NAME]`.
+aggregation.  `python -m benchmarks.run [--quick|--smoke] [--only NAME]
+[--json PATH]`.
 
 `--smoke` is the CI mode: quick sizes AND single-iteration timing
 (benchmarks.common.SMOKE), so every bench script still executes end to
-end — numbers are meaningless, rot is caught."""
+end — numbers are meaningless, rot is caught.
+
+`--json PATH` serializes every bench's `time_fn` records (keyed by bench
+name, in call order) plus the failure list — CI uploads it as the
+per-commit perf-trajectory artifact."""
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -22,6 +28,9 @@ BENCHES = [
      "paper §4.4 + arXiv:1011.0235 — frame-batched throughput"),
     ("analytics", "benchmarks.bench_analytics",
      "paper abstract — O(1) sliding-window queries + tracker fps"),
+    ("bands", "benchmarks.bench_bands",
+     "paper §4.6 + arXiv:1510.05142 — band streaming under a "
+     "memory budget"),
     ("multidevice", "benchmarks.bench_multidevice",
      "paper Fig. 16/17 — multi-device bin/spatial sharding"),
     ("speedup", "benchmarks.bench_speedup",
@@ -39,19 +48,36 @@ def main(argv=None):
                     help="CI smoke: --quick sizes + 1 timing iteration")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write per-bench time_fn records as JSON")
     args = ap.parse_args(argv)
-    only = set(args.only.split(",")) if args.only else None
+
+    valid = [name for name, _, _ in BENCHES]
+    only = None
+    if args.only:
+        only = {n.strip() for n in args.only.split(",") if n.strip()}
+        unknown = sorted(only - set(valid))
+        if unknown or not only:
+            # An unknown name must fail loudly: silently selecting nothing
+            # and reporting "all benches complete" hid typos from CI.
+            print(f"unknown bench name(s): {unknown or '(none given)'}\n"
+                  f"valid names: {valid}", file=sys.stderr)
+            sys.exit(2)
+
+    from benchmarks import common
+
     if args.smoke:
-        from benchmarks import common
         common.SMOKE = True
         args.quick = True
 
     failures = []
+    records: dict = {}
     for name, module, desc in BENCHES:
         if only and name not in only:
             continue
         print(f"\n{'='*72}\n[{name}] {desc}\n{'='*72}")
         t0 = time.perf_counter()
+        start = len(common.TIMINGS)
         try:
             mod = __import__(module, fromlist=["run"])
             print(mod.run(quick=args.quick))
@@ -59,6 +85,20 @@ def main(argv=None):
         except Exception as e:  # keep the suite going
             failures.append(name)
             print(f"-- {name} FAILED: {type(e).__name__}: {e}")
+        records[name] = common.TIMINGS[start:]
+
+    if args.json:
+        payload = {
+            "smoke": args.smoke,
+            "quick": args.quick,
+            "failures": failures,
+            "benches": records,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"\nwrote {sum(map(len, records.values()))} timing records "
+              f"to {args.json}")
+
     if failures:
         print(f"\nFAILED benches: {failures}")
         sys.exit(1)

@@ -12,13 +12,18 @@ Pipeline per frame (all on-accelerator once the frame is staged):
      a critical role"): the last `--map-frames` H's are stacked and ONE
      rank-polymorphic `likelihood_map` call scores every window of every
      frame
+  4. the large-frame regime (paper §4.6): a frame `--large-scale`x the
+     stream size is scored under a memory budget an eighth of its full H
+     footprint — row bands stream through the carry-aware kernels
+     (core/bands.py) and the likelihood map is exact without the
+     (b, h, w) H ever existing
 
 For offline clips, `FragmentTracker.track` runs the same math as one
 batched-H + `lax.scan` loop per chunk (see benchmarks/bench_analytics.py
 for the frames/sec delta vs the per-frame loop).
 
     PYTHONPATH=src python examples/video_analytics.py [--frames 40]
-                   [--batch auto|N] [--targets 2]
+                   [--batch auto|N] [--targets 2] [--large-scale 2]
 """
 
 import argparse
@@ -49,6 +54,9 @@ def main(argv=None):
     ap.add_argument("--map-frames", type=int, default=4,
                     help="trailing frames scored by one batched "
                          "likelihood_map call")
+    ap.add_argument("--large-scale", type=int, default=2,
+                    help="stage-4 frame is this multiple of --hw "
+                         "(0 skips the banded large-frame demo)")
     args = ap.parse_args(argv)
     h, w = args.hw
     batch = args.batch if args.batch == "auto" else int(args.batch)
@@ -100,6 +108,26 @@ def main(argv=None):
                                          lmap.shape[1:]))
     print(f"likelihood maps {lmap.shape} (batched over {lmap.shape[0]} "
           f"frames), last-frame peak={float(lmap[-1].max()):.3f} at {peak}")
+
+    # --- stage 4: band-streamed large frame under a memory budget --------
+    if args.large_scale:
+        big_h, big_w = h * args.large_scale, w * args.large_scale
+        big = np.tile(frames[-1], (args.large_scale, args.large_scale))
+        full_bytes = 4 * args.bins * big_h * big_w
+        budget = full_bytes // 8
+        stats = {}
+        t0 = time.perf_counter()
+        blmap = ih.banded_likelihood_map(
+            ih.map_bands(big, memory_budget_bytes=budget),
+            target_hists[0], (size, size), distances.intersection,
+            stride=16, stats=stats)
+        jax.block_until_ready(blmap)
+        dt = time.perf_counter() - t0
+        print(f"banded {big_h}x{big_w}: budget {budget / 2**20:.0f} MB "
+              f"(full H {full_bytes / 2**20:.0f} MB), "
+              f"{stats['num_bands']} bands, peak proxy "
+              f"{stats['peak_bytes'] / 2**20:.0f} MB, "
+              f"map {tuple(blmap.shape)} in {dt:.2f}s")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,9 @@
 """Core: the paper's contribution — integral histograms and their uses."""
 
 from repro.core.binning import PAD_BIN, bin_indices, one_hot_bins
-from repro.core.scans import METHODS, cw_b, cw_sts, cw_tis, wf_tis
+from repro.core.scans import METHODS, apply_carry, cw_b, cw_sts, cw_tis, wf_tis
 
 __all__ = [
     "PAD_BIN", "bin_indices", "one_hot_bins",
-    "METHODS", "cw_b", "cw_sts", "cw_tis", "wf_tis",
+    "METHODS", "apply_carry", "cw_b", "cw_sts", "cw_tis", "wf_tis",
 ]

@@ -19,6 +19,12 @@ a task queue (PCIe-attached, no peer communication).  On a TPU mesh the
 
   * Both compose: rows over one mesh axis, bins over the other.
 
+  * **Band streaming** (`iter_banded_sharded_ih`) — either scheme composed
+    with core/bands.py: row bands of one huge frame stream through the
+    sharded computation, the (b, w) band carry riding on top of the
+    intra-band device carries.  Bounds per-device live memory to one
+    sharded band.
+
 The exclusive cross-device prefix is implemented two ways:
   - `allgather`: gather all carries, masked sum (one collective; XLA
     optimizes this well on ICI).
@@ -29,15 +35,13 @@ The exclusive cross-device prefix is implemented two ways:
 
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.binning import PAD_BIN, bin_indices
+from repro.core.scans import apply_carry
 from repro.kernels.ops import integral_histogram
 
 
@@ -161,6 +165,79 @@ def spatial_sharded_ih(
         check_vma=False,
     )
     return fn(image)
+
+
+def iter_banded_sharded_ih(
+    image,
+    num_bins: int,
+    mesh: Mesh,
+    *,
+    sharding: str = "bin",
+    band_h: int | None = None,
+    memory_budget_bytes: int | None = None,
+    bin_axis: str = "model",
+    row_axis: str = "data",
+    method: str = "wf_tis",
+    backend: str = "jnp",
+    value_range: int = 256,
+    scan_impl: str = "allgather",
+):
+    """Band streaming composed with the sharded computations: each band
+    runs bin- or spatially-sharded across the mesh, and the same (b, w)
+    bottom-row carry threads between bands on top of the intra-band
+    device carries.
+
+    This is the paper-§4.6 scale story squared: ``spatial_sharded_ih``
+    spreads one frame's H across a mesh; banding additionally bounds how
+    much of it is ever live per device, so the 32 GB workload streams
+    through a mesh whose total memory is far smaller.  ``sharding="bin"``
+    accepts (h, w) or (n, h, w); ``"spatial"`` is single-frame and rounds
+    the band height to the row-shard count.  Yields ``BandH`` chunks whose
+    ``H`` stays sharded (``carry`` inherits the sharding — zero extra
+    collectives for the band composition, it is one elementwise add).
+    Assemble host-side (``np.asarray`` per band) when a materialized H is
+    actually wanted; that doubles as the D2H spill.
+    """
+    from repro.core import bands
+
+    if sharding not in ("bin", "spatial"):
+        raise ValueError(f"unknown sharding {sharding!r} (bin|spatial)")
+    h, w = image.shape[-2:]
+    row_multiple = 1
+    if sharding == "spatial":
+        if image.ndim != 2:
+            raise ValueError("spatial banding is single-frame: (h, w)")
+        row_multiple = mesh.shape[row_axis]
+        if h % row_multiple:
+            raise ValueError(
+                f"height {h} not divisible by {row_multiple} row shards"
+            )
+    num_frames = 1 if image.ndim == 2 else image.shape[0]
+    plan = bands.plan_bands(
+        h, w, num_bins,
+        band_h=band_h, memory_budget_bytes=memory_budget_bytes,
+        num_frames=num_frames, row_multiple=row_multiple,
+    )
+
+    def compute_fn(band_img, carry_in):
+        if sharding == "bin":
+            H_band = bin_sharded_ih(
+                band_img, num_bins, mesh, bin_axis=bin_axis,
+                method=method, backend=backend, value_range=value_range,
+            )
+        else:
+            H_band = spatial_sharded_ih(
+                band_img, num_bins, mesh, row_axis=row_axis,
+                method=method, backend=backend, value_range=value_range,
+                scan_impl=scan_impl,
+            )
+        # Band composition is an elementwise add: the carry carries
+        # H_band's sharding, so no resharding or collective happens.
+        return apply_carry(H_band, carry_in)
+
+    return bands.iter_banded_ih(
+        image, num_bins, plan=plan, compute_fn=compute_fn
+    )
 
 
 def distributed_region_query(H_sharded, rects, mesh, bin_axis="model"):

@@ -108,8 +108,46 @@ class IntegralHistogram:
         )
         return executor.map(itertools.chain([first], frames))
 
+    def map_bands(
+        self,
+        image,
+        *,
+        band_h: int | None = None,
+        memory_budget_bytes: int | None = None,
+        prefetch: int = 0,
+        device=None,
+    ):
+        """Stream H as row bands under a memory budget (core/bands.py).
+
+        For frames whose (num_bins, h, w) H exceeds device or host memory
+        (paper §4.6: 32 GB at 64 MB x 128 bins) the monolithic ``__call__``
+        is impossible; this yields ``BandH`` chunks carrying the band's H
+        and its (b, w) bottom-row carry, bit-exact vs the monolithic
+        result.  Feed the iterator to ``banded_query`` /
+        ``banded_sliding_windows`` / ``banded_likelihood_map`` for O(1)
+        analytics that never materialize H.  ``prefetch >= 1`` stages the
+        next band's pixels while the current band computes.
+        """
+        from repro.core import bands
+
+        return bands.iter_banded_ih(
+            image, self.num_bins,
+            band_h=band_h, memory_budget_bytes=memory_budget_bytes,
+            prefetch=prefetch, device=device,
+            method=self.method, backend=self.backend, tile=self.tile,
+            bin_block=self.bin_block, use_mxu=self.use_mxu,
+            interpret=self.interpret, value_range=self.value_range,
+        )
+
     # ---- O(1) analytics on a computed H ----
     query = staticmethod(region_query.region_histogram)
     sliding_windows = staticmethod(region_query.sliding_window_histograms)
     likelihood_map = staticmethod(region_query.likelihood_map)
     multi_scale_search = staticmethod(region_query.multi_scale_search)
+
+    # ---- the same analytics over a band stream (H never materializes) ----
+    banded_query = staticmethod(region_query.banded_region_histogram)
+    banded_sliding_windows = staticmethod(
+        region_query.banded_sliding_window_histograms
+    )
+    banded_likelihood_map = staticmethod(region_query.banded_likelihood_map)

@@ -144,3 +144,19 @@ def prefetch_to_device(
             yield queue.popleft()
     while queue:
         yield queue.popleft()
+
+
+def iter_row_bands(image, spans) -> Iterator:
+    """Host-side row-band slices ``image[..., r0:r1, :]`` of a frame or
+    stack, one per (r0, r1) span (core/bands.py plans the spans)."""
+    for r0, r1 in spans:
+        yield image[..., r0:r1, :]
+
+
+def prefetch_row_bands(image, spans, size: int = 2, device=None) -> Iterator:
+    """Band-aware prefetch: stage the next band's image slice onto the
+    device while the current band's kernel runs — the §4.4 dual-buffering
+    idea applied inside one large frame instead of across a frame stream.
+    Device commitment is bounded by ``size`` band slices (plus the one the
+    consumer holds); the full frame never leaves the host."""
+    return prefetch_to_device(iter_row_bands(image, spans), size, device)

@@ -28,12 +28,21 @@ shared across the frame axis; for per-frame rects, vmap
     (the general path that also serves arbitrary ``rects`` via
     ``region_histogram``); kept as the oracle for the slice path and for
     benchmarking the difference (benchmarks/bench_analytics.py).
+
+The ``banded_*`` variants run the same queries over a band stream
+(core/bands.py) instead of a materialized H: Eq. 2 only ever reads corner
+*rows*, so a rect touches at most 2 bands and a sliding-window field
+touches two strided row lattices — frames whose full (b, h, w) H exceeds
+memory (paper §4.6: 32 GB at 64 MB x 128 bins) still get exact O(1)
+queries and likelihood maps.
 """
 
 from __future__ import annotations
 
-import jax
+import itertools
+
 import jax.numpy as jnp
+import numpy as np
 
 
 def _corner(H: jnp.ndarray, r: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
@@ -215,3 +224,165 @@ def multi_scale_search(
         best_rect = jnp.where(better[..., None], rect, best_rect)
         best_score = jnp.maximum(score, best_score)
     return best_rect, best_score, maps
+
+
+# ---------------------------------------------------------------------------
+# Banded queries: Eq. 2 over a band stream (core/bands.py) — the full
+# (b, h, w) H never materializes.
+# ---------------------------------------------------------------------------
+def compressed_region_histogram(
+    Hc: jnp.ndarray, row_ids: jnp.ndarray, rects: jnp.ndarray
+) -> jnp.ndarray:
+    """Eq.-2 queries against a row-compressed H.
+
+    ``Hc`` (..., b, k, w) holds only the full-frame H rows listed in
+    ``row_ids`` (sorted, ascending).  Every rect corner row (r0 - 1 and
+    r1) must appear in ``row_ids`` or be -1 (the virtual zero row).  The
+    four-term association order matches ``region_histogram`` exactly, so
+    fp32 results are bit-identical; integer-dtype Hc wraps modularly
+    (the reduced-width spill policies rely on this).
+    """
+    r0, c0, r1, c1 = (rects[..., i] for i in range(4))
+
+    def m(r):  # remap a frame row to its slot in Hc; keep -1 virtual
+        return jnp.where(r >= 0, jnp.searchsorted(row_ids, r), -1)
+
+    return (
+        _corner(Hc, m(r1), c1)
+        - _corner(Hc, m(r0 - 1), c1)
+        - _corner(Hc, m(r1), c0 - 1)
+        + _corner(Hc, m(r0 - 1), c0 - 1)
+    )
+
+
+def corner_rows(rects: np.ndarray) -> np.ndarray:
+    """The distinct full-frame H rows Eq. 2 reads for ``rects``: r0 - 1
+    and r1 per rect, deduplicated, the virtual -1 row dropped.  Shared by
+    ``banded_region_histogram`` and ``bands.SpilledIH.region_histogram``."""
+    rects = np.asarray(rects)
+    needed = np.unique(
+        np.concatenate([(rects[..., 0] - 1).ravel(), rects[..., 2].ravel()])
+    )
+    return needed[needed >= 0].astype(np.int64)
+
+
+def banded_region_histogram(bands, rects: jnp.ndarray) -> jnp.ndarray:
+    """``region_histogram`` over a band iterator.
+
+    Streams the bands once, keeping only the corner rows the rects touch
+    (each rect's four corners live on two rows, hence in <= 2 bands);
+    memory is O(distinct corner rows x b x w), never O(b x h x w).
+    """
+    rects_np = np.asarray(rects)
+    needed = corner_rows(rects_np)
+    chunks = []
+    for band in bands:
+        sel = (needed >= band.r0) & (needed < band.r1)
+        if sel.any():
+            chunks.append(np.asarray(band.H[..., needed[sel] - band.r0, :]))
+    Hc = np.concatenate(chunks, axis=-2)
+    return compressed_region_histogram(
+        jnp.asarray(Hc), jnp.asarray(needed), jnp.asarray(rects_np)
+    )
+
+
+def banded_sliding_window_histograms(
+    bands,
+    window: tuple[int, int],
+    stride: int = 1,
+    *,
+    stats: dict | None = None,
+) -> jnp.ndarray:
+    """``sliding_window_histograms`` over a band iterator.
+
+    On the regular window grid all four Eq.-2 corners live on two strided
+    row lattices — bottom rows ``wh-1 + i*s`` and top rows ``i*s - 1`` —
+    so each band contributes a few rows to two (..., b, n_rows, w) slabs
+    and is then dropped.  The column arithmetic afterwards is the same
+    strided-slice trick as the monolithic path.  Peak memory is one band
+    plus the two slabs (``stats`` receives the proxy; see
+    benchmarks/bench_bands.py), never the full H.
+
+    The slabs hold n_rows = (h - wh) // stride + 1 rows each, so the
+    memory win over monolithic H scales with the stride: at stride 1 the
+    slabs (and the query field itself, which is ~ b*h*w values) match the
+    full H footprint and banding cannot help — a UserWarning says so
+    rather than silently over-allocating the budget the caller set.
+    """
+    import warnings
+
+    bands = iter(bands)
+    first = next(bands)
+    h, w = first.frame_h, first.H.shape[-1]
+    wh, ww = window
+    s = stride
+    n_r = (h - wh) // s + 1
+    n_c = (w - ww) // s + 1
+    lead = first.H.shape[:-3]
+    b = first.H.shape[-3]
+    if n_r <= 0 or n_c <= 0:
+        return jnp.zeros(lead + (max(n_r, 0), max(n_c, 0), b), jnp.float32)
+
+    nlead = int(np.prod(lead, dtype=np.int64) or 1)
+    slab_bytes = 2 * 4 * nlead * b * n_r * w
+    full_bytes = 4 * nlead * b * h * w
+    if slab_bytes >= full_bytes:
+        warnings.warn(
+            f"banded sliding windows at stride {s} need {slab_bytes} B of "
+            f"corner-row slabs >= the {full_bytes} B monolithic H they "
+            "avoid; increase the stride (slabs scale with 1/stride) or "
+            "use the monolithic path for frames this size",
+            stacklevel=2,
+        )
+    bot = np.zeros(lead + (b, n_r, w), np.float32)
+    top = np.zeros(lead + (b, n_r, w), np.float32)
+    peak_band = 0
+    for band in itertools.chain([first], bands):
+        Hb = np.asarray(band.H)
+        peak_band = max(peak_band, Hb.nbytes)
+        # bottom lattice: global rows wh-1 + i*s inside [r0, r1)
+        i_lo = max(0, -(-(band.r0 - (wh - 1)) // s))
+        i_hi = min(n_r - 1, (band.r1 - 1 - (wh - 1)) // s)
+        if i_hi >= i_lo:
+            ii = np.arange(i_lo, i_hi + 1)
+            bot[..., ii, :] = Hb[..., wh - 1 + ii * s - band.r0, :]
+        # top lattice: global rows i*s - 1, i >= 1 (i = 0 is the zero row)
+        i_lo = max(1, -(-(band.r0 + 1) // s))
+        i_hi = min(n_r - 1, band.r1 // s)
+        if i_hi >= i_lo:
+            ii = np.arange(i_lo, i_hi + 1)
+            top[..., ii, :] = Hb[..., ii * s - 1 - band.r0, :]
+
+    diff = bot - top                                   # (..., b, n_r, w)
+    d = diff[..., ww - 1 :: s][..., :n_c]
+    c = np.zeros_like(d)                               # virtual zero column
+    c[..., 1:] = diff[..., s - 1 :: s][..., : n_c - 1]
+    if stats is not None:
+        stats.update(
+            num_bands=first.num_bands,
+            band_bytes=peak_band,
+            slab_bytes=bot.nbytes + top.nbytes,
+            peak_bytes=peak_band + bot.nbytes + top.nbytes,
+            full_h_bytes=4 * int(np.prod(lead, dtype=np.int64) or 1)
+            * b * h * w,
+        )
+    return jnp.asarray(np.moveaxis(d - c, -3, -1))     # (..., n_r, n_c, b)
+
+
+def banded_likelihood_map(
+    bands,
+    target_hist: jnp.ndarray,
+    window: tuple[int, int],
+    metric,
+    stride: int = 1,
+    *,
+    stats: dict | None = None,
+):
+    """``likelihood_map`` over a band stream: exact per-position similarity
+    for frames whose full H exceeds memory."""
+    hists = banded_sliding_window_histograms(
+        bands, window, stride, stats=stats
+    )
+    if target_hist.ndim > 1:
+        target_hist = target_hist[..., None, None, :]
+    return metric(hists, target_hist)

@@ -33,6 +33,22 @@ from repro.core.binning import bin_indices, one_hot_bins
 
 
 # ---------------------------------------------------------------------------
+# Band-carry composition.  An integral histogram is a prefix sum over rows,
+# so the H of rows [r0, r1) of a frame equals the local H of that band plus
+# the full-frame H's row r0-1 — an (..., b, w) aggregate, the WF-TiS column
+# carry lifted out of the kernel.  All arithmetic is integer-valued fp32
+# (exact below 2**24), so post-adding the carry is bit-identical to seeding
+# the scan with it; core/bands.py streams whole frames through this.
+# ---------------------------------------------------------------------------
+def apply_carry(H: jnp.ndarray, carry_in: jnp.ndarray | None) -> jnp.ndarray:
+    """Compose a band's local H (..., b, bh, w) with the (..., b, w)
+    aggregate of everything above the band (``None`` = topmost band)."""
+    if carry_in is None:
+        return H
+    return H + carry_in.astype(H.dtype)[..., :, None, :]
+
+
+# ---------------------------------------------------------------------------
 # CW-B: naive baseline — bins processed one at a time, rows/cols as separate
 # scan primitives (Algorithm 2 of the paper).
 # ---------------------------------------------------------------------------
@@ -111,7 +127,11 @@ def cw_tis(
 # explicit (the (b, w) column carry is exactly the kernel's VMEM scratch).
 # ---------------------------------------------------------------------------
 def _wf_tis_single(
-    image: jnp.ndarray, num_bins: int, value_range: int, tile: int
+    image: jnp.ndarray,
+    num_bins: int,
+    value_range: int,
+    tile: int,
+    carry_in: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     idx = bin_indices(image, num_bins, value_range)
     h, w = image.shape
@@ -128,19 +148,33 @@ def _wf_tis_single(
         out = vs + col_carry[:, None, :]
         return out[:, -1, :], out                            # new carry, strip H
 
-    zero = jnp.zeros((num_bins, w), dtype=jnp.float32)
-    _, strips = jax.lax.scan(strip_step, zero, idx_strips)
+    # A band's carry_in seeds the scan exactly where the previous band's
+    # bottom row left off — the natural statement of band streaming.
+    init = (
+        jnp.zeros((num_bins, w), dtype=jnp.float32)
+        if carry_in is None
+        else carry_in.astype(jnp.float32)
+    )
+    _, strips = jax.lax.scan(strip_step, init, idx_strips)
     return jnp.moveaxis(strips, 1, 0).reshape(num_bins, hp, w)[:, :h, :]
 
 
 def wf_tis(
-    image: jnp.ndarray, num_bins: int, value_range: int = 256, tile: int = 128
+    image: jnp.ndarray,
+    num_bins: int,
+    value_range: int = 256,
+    tile: int = 128,
+    carry_in: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     if image.ndim == 3:  # frame stack: widen the strip scan's carry to (n, b, w)
+        if carry_in is None:
+            return jax.vmap(
+                lambda im: _wf_tis_single(im, num_bins, value_range, tile)
+            )(image)
         return jax.vmap(
-            lambda im: _wf_tis_single(im, num_bins, value_range, tile)
-        )(image)
-    return _wf_tis_single(image, num_bins, value_range, tile)
+            lambda im, c: _wf_tis_single(im, num_bins, value_range, tile, c)
+        )(image, carry_in)
+    return _wf_tis_single(image, num_bins, value_range, tile, carry_in)
 
 
 METHODS = {"cw_b": cw_b, "cw_sts": cw_sts, "cw_tis": cw_tis, "wf_tis": wf_tis}

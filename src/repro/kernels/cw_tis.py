@@ -54,14 +54,16 @@ def _hscan_kernel(idx_ref, out_ref, row_carry, *, bin_block, use_mxu):
     out_ref[0] = hs
 
 
-def _vscan_kernel(hh_ref, out_ref, col_carry, *, use_mxu):
+def _vscan_kernel(hh_ref, carry_ref, out_ref, col_carry, *, use_mxu):
     """Grid (n, nbb, ntw, nth), row tiles innermost: horizontal-strip sweep
-    (Fig. 5 right).  Input is the horizontally-scanned tensor."""
+    (Fig. 5 right).  Input is the horizontally-scanned tensor.  The first
+    tile row of each frame seeds its carry from the band carry-in (zeros
+    unless this call computes a row band of a larger frame)."""
     ih = pl.program_id(3)
 
     hs = hh_ref[0]                                         # (BIN_BLOCK, TH, TW)
     vs = _col_scan_mxu(hs) if use_mxu else jnp.cumsum(hs, axis=1)
-    cc = jnp.where(ih == 0, 0.0, col_carry[...])           # (BIN_BLOCK, TW)
+    cc = jnp.where(ih == 0, carry_ref[0], col_carry[...])  # (BIN_BLOCK, TW)
     vs = vs + cc[:, None, :]
     col_carry[...] = vs[:, -1, :]
     out_ref[0] = vs
@@ -75,16 +77,30 @@ def cw_tis_pallas(
     bin_block: int = 8,
     use_mxu: bool = True,
     interpret: bool = False,
+    carry: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
-    """Two-pass CW-TiS integral histogram (see wf_tis_pallas for contract)."""
+    """Two-pass CW-TiS integral histogram (see wf_tis_pallas for contract).
+
+    ``carry`` ([n,] num_bins, w) enters the vertical pass only: the
+    horizontal scan is band-local, the band composition is a column offset.
+    """
     squeeze = idx.ndim == 2
     if squeeze:
         idx = idx[None]
+        if carry is not None:
+            carry = carry[None]
     n, h, w = idx.shape
     if h % tile or w % tile:
         raise ValueError(f"padded image {h}x{w} not divisible by tile {tile}")
     if num_bins % bin_block:
         raise ValueError(f"{num_bins} bins not divisible by bin_block {bin_block}")
+    if carry is None:
+        carry = jnp.zeros((n, num_bins, w), jnp.float32)
+    if carry.shape != (n, num_bins, w):
+        raise ValueError(
+            f"carry shape {carry.shape} != {(n, num_bins, w)} (frames, "
+            "padded bins, padded width)"
+        )
     nth, ntw, nbb = h // tile, w // tile, num_bins // bin_block
 
     hh = pl.pallas_call(
@@ -107,7 +123,10 @@ def cw_tis_pallas(
         in_specs=[
             pl.BlockSpec(
                 (1, bin_block, tile, tile), lambda f, bb, iw, ih: (f, bb, ih, iw)
-            )
+            ),
+            pl.BlockSpec(
+                (1, bin_block, tile), lambda f, bb, iw, ih: (f, bb, iw)
+            ),
         ],
         out_specs=pl.BlockSpec(
             (1, bin_block, tile, tile), lambda f, bb, iw, ih: (f, bb, ih, iw)
@@ -115,5 +134,5 @@ def cw_tis_pallas(
         out_shape=jax.ShapeDtypeStruct((n, num_bins, h, w), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bin_block, tile), jnp.float32)],
         interpret=interpret,
-    )(hh)
+    )(hh, carry.astype(jnp.float32))
     return out[0] if squeeze else out

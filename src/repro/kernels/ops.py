@@ -19,6 +19,22 @@ Backends:
               for CPU wall-time benchmarks and as the production path on
               non-TPU hosts).
   "auto"    — pallas on TPU, jnp elsewhere.
+
+Band streaming (core/bands.py) enters here through two knobs:
+
+  carry_in            — ([n,] num_bins, w) aggregate of everything above
+                        this image slice; the result is the full-frame H
+                        restricted to the slice's rows.  Threads into the
+                        Pallas kernels' VMEM carry chain and the jnp
+                        wf_tis scan seed; bit-exact either way (all
+                        arithmetic is integer-valued fp32).
+  memory_budget_bytes — cap on the per-dispatch H footprint: frames whose
+                        (n, b, h, w) output exceeds it are computed band
+                        by band with the carry threaded between dispatches
+                        and reassembled.  Bounds the transient working set
+                        (one-hot masks, transposes, scan intermediates) to
+                        a band; use core/bands.py directly when even the
+                        assembled H must never materialize.
 """
 
 from __future__ import annotations
@@ -58,6 +74,48 @@ def _on_tpu() -> bool:
         "interpret", "value_range",
     ),
 )
+def _integral_histogram_jit(
+    image: jnp.ndarray,
+    carry_in: jnp.ndarray | None,
+    num_bins: int,
+    *,
+    method: str,
+    backend: str,
+    tile: int,
+    bin_block: int,
+    use_mxu: bool,
+    interpret: bool,
+    value_range: int,
+) -> jnp.ndarray:
+    """The jit'd core: backend already resolved, inputs already validated."""
+    if backend == "jnp":
+        if method == "wf_tis":
+            # Native carry seeding: the band scan starts from carry_in.
+            return scans.wf_tis(
+                image, num_bins, value_range, tile=tile, carry_in=carry_in
+            )
+        kw = {} if method in ("cw_b", "cw_sts") else {"tile": tile}
+        H = scans.METHODS[method](image, num_bins, value_range, **kw)
+        return scans.apply_carry(H, carry_in)
+
+    h, w = image.shape[-2:]
+    idx = bin_indices(image, num_bins, value_range)
+    idx = _pad_to(idx, tile, tile, PAD_BIN)
+    nb_pad = num_bins + (-num_bins) % bin_block
+    carry = None
+    if carry_in is not None:
+        # Pad (..., num_bins, w) -> (..., nb_pad, w_pad): padded bins hold
+        # no mass and padded columns are cropped, so zero-fill is exact.
+        pad = [(0, 0)] * (carry_in.ndim - 2)
+        pad += [(0, nb_pad - num_bins), (0, (-w) % tile)]
+        carry = jnp.pad(carry_in.astype(jnp.float32), pad)
+    out = PALLAS_METHODS[method](
+        idx, nb_pad, tile=tile, bin_block=bin_block, use_mxu=use_mxu,
+        interpret=interpret, carry=carry,
+    )
+    return out[..., :num_bins, :h, :w]
+
+
 def integral_histogram(
     image: jnp.ndarray,
     num_bins: int,
@@ -69,8 +127,14 @@ def integral_histogram(
     use_mxu: bool = True,
     interpret: bool = False,
     value_range: int = 256,
+    carry_in: jnp.ndarray | None = None,
+    memory_budget_bytes: int | None = None,
 ) -> jnp.ndarray:
-    """Inclusive integral histogram of a frame or an (n, h, w) frame stack."""
+    """Inclusive integral histogram of a frame or an (n, h, w) frame stack.
+
+    See the module docstring for ``carry_in`` (band composition) and
+    ``memory_budget_bytes`` (auto-banding).
+    """
     if image.ndim not in (2, 3):
         raise ValueError(f"expected (h, w) or (n, h, w), got {image.shape}")
     if backend not in ("auto", "pallas", "jnp"):
@@ -88,17 +152,33 @@ def integral_histogram(
         backend = (
             "pallas" if _on_tpu() and method in PALLAS_METHODS else "jnp"
         )
+    if carry_in is not None:
+        want = image.shape[:-2] + (num_bins, image.shape[-1])
+        if carry_in.shape != want:
+            raise ValueError(
+                f"carry_in shape {carry_in.shape} != {want} "
+                "(leading frame axes, num_bins, width)"
+            )
 
-    if backend == "jnp":
-        kw = {} if method in ("cw_b", "cw_sts") else {"tile": tile}
-        return scans.METHODS[method](image, num_bins, value_range, **kw)
+    if memory_budget_bytes is not None:
+        from repro.core import bands  # deferred: bands imports this module
 
-    h, w = image.shape[-2:]
-    idx = bin_indices(image, num_bins, value_range)
-    idx = _pad_to(idx, tile, tile, PAD_BIN)
-    nb_pad = num_bins + (-num_bins) % bin_block
-    out = PALLAS_METHODS[method](
-        idx, nb_pad, tile=tile, bin_block=bin_block, use_mxu=use_mxu,
-        interpret=interpret,
+        h, w = image.shape[-2:]
+        num_frames = 1 if image.ndim == 2 else image.shape[0]
+        plan = bands.plan_bands(
+            h, w, num_bins,
+            memory_budget_bytes=memory_budget_bytes, num_frames=num_frames,
+        )
+        if len(plan.spans) > 1:
+            return bands.banded_integral_histogram(
+                image, num_bins, plan=plan, carry_in=carry_in,
+                method=method, backend=backend, tile=tile,
+                bin_block=bin_block, use_mxu=use_mxu, interpret=interpret,
+                value_range=value_range,
+            )
+
+    return _integral_histogram_jit(
+        image, carry_in, num_bins, method=method, backend=backend,
+        tile=tile, bin_block=bin_block, use_mxu=use_mxu,
+        interpret=interpret, value_range=value_range,
     )
-    return out[..., :num_bins, :h, :w]

@@ -88,6 +88,7 @@ def _col_scan_mxu(x: jnp.ndarray) -> jnp.ndarray:
 
 def _wf_tis_kernel(
     idx_ref,      # (1, TH, TW) int32 bin indices (PAD_BIN=-1 outside the image)
+    carry_ref,    # (1, BIN_BLOCK, TW) fp32 band carry-in (zeros = topmost band)
     out_ref,      # (1, BIN_BLOCK, TH, TW) fp32 integral histogram block
     row_carry,    # VMEM scratch (NBB, BIN_BLOCK, TH) — right-edge carries
     col_carry,    # VMEM scratch (NBB, BIN_BLOCK, W_PAD) — bottom-edge carries
@@ -129,9 +130,12 @@ def _wf_tis_kernel(
         vs = jnp.cumsum(hs, axis=1)
 
     # Add the running column carry (full integral at the last row of the
-    # strip above), zeroed on the first strip — per frame, same argument.
+    # strip above).  On the first strip — of every frame, since the raster
+    # restarts there — it is seeded from the band carry-in instead of zero:
+    # the host-level band decomposition (core/bands.py) enters the kernel
+    # here, exactly where the VMEM carry chain begins.
     cols = pl.dslice(iw * tile_w, tile_w)
-    cc = jnp.where(ih == 0, 0.0, col_carry[bb, :, cols])   # (BIN_BLOCK, TW)
+    cc = jnp.where(ih == 0, carry_ref[0], col_carry[bb, :, cols])
     vs = vs + cc[:, None, :]
     col_carry[bb, :, cols] = vs[:, -1, :]                  # new bottom edge
 
@@ -146,6 +150,7 @@ def wf_tis_pallas(
     bin_block: int = 8,
     use_mxu: bool = True,
     interpret: bool = False,
+    carry: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Fused WF-TiS integral histogram.
 
@@ -154,6 +159,9 @@ def wf_tis_pallas(
         h % tile == 0 and w % tile == 0 (padding uses PAD_BIN so it matches
         no bin).
       num_bins: padded bin count, multiple of ``bin_block``.
+      carry: optional ([n,] num_bins, w) fp32 band carry-in — the bottom row
+        of the band above when this call computes one row band of a larger
+        frame (core/bands.py).  ``None`` means a frame top (zero carry).
 
     Returns:
       (num_bins, h, w) fp32 inclusive integral histogram for a single
@@ -162,11 +170,20 @@ def wf_tis_pallas(
     squeeze = idx.ndim == 2
     if squeeze:
         idx = idx[None]
+        if carry is not None:
+            carry = carry[None]
     n, h, w = idx.shape
     if h % tile or w % tile:
         raise ValueError(f"padded image {h}x{w} not divisible by tile {tile}")
     if num_bins % bin_block:
         raise ValueError(f"{num_bins} bins not divisible by bin_block {bin_block}")
+    if carry is None:
+        carry = jnp.zeros((n, num_bins, w), jnp.float32)
+    if carry.shape != (n, num_bins, w):
+        raise ValueError(
+            f"carry shape {carry.shape} != {(n, num_bins, w)} (frames, "
+            "padded bins, padded width)"
+        )
     nth, ntw, nbb = h // tile, w // tile, num_bins // bin_block
 
     kernel = functools.partial(
@@ -180,7 +197,10 @@ def wf_tis_pallas(
         kernel,
         grid=(n, nth, ntw, nbb),
         in_specs=[
-            pl.BlockSpec((1, tile, tile), lambda f, ih, iw, bb: (f, ih, iw))
+            pl.BlockSpec((1, tile, tile), lambda f, ih, iw, bb: (f, ih, iw)),
+            pl.BlockSpec(
+                (1, bin_block, tile), lambda f, ih, iw, bb: (f, bb, iw)
+            ),
         ],
         out_specs=pl.BlockSpec(
             (1, bin_block, tile, tile), lambda f, ih, iw, bb: (f, bb, ih, iw)
@@ -188,5 +208,5 @@ def wf_tis_pallas(
         out_shape=jax.ShapeDtypeStruct((n, num_bins, h, w), jnp.float32),
         scratch_shapes=scratch,
         interpret=interpret,
-    )(idx)
+    )(idx, carry.astype(jnp.float32))
     return out[0] if squeeze else out

@@ -172,21 +172,19 @@ def _layer_scaled(cfg):
         tail = cfg.num_layers % len(cfg.block_pattern or ("r", "r", "a"))
         pat = len(cfg.block_pattern or ("r", "r", "a"))
         la, lb = 1 * pat + tail, 2 * pat + tail
-        mk = lambda L: dataclasses.replace(cfg, num_layers=L,
-                                           scan_layers=False)
     elif cfg.is_encoder_decoder:
         la, lb = 2, 4
-        mk = lambda L: dataclasses.replace(
-            cfg, num_layers=L, num_encoder_layers=L, num_decoder_layers=L,
-            scan_layers=False)
     elif cfg.is_moe and cfg.first_k_dense:
         la, lb = cfg.first_k_dense + 1, cfg.first_k_dense + 2
-        mk = lambda L: dataclasses.replace(cfg, num_layers=L,
-                                           scan_layers=False)
     else:
         la, lb = 2, 4
-        mk = lambda L: dataclasses.replace(cfg, num_layers=L,
-                                           scan_layers=False)
+
+    def mk(num):
+        if cfg.is_encoder_decoder:
+            return dataclasses.replace(
+                cfg, num_layers=num, num_encoder_layers=num,
+                num_decoder_layers=num, scan_layers=False)
+        return dataclasses.replace(cfg, num_layers=num, scan_layers=False)
     return mk(la), la, mk(lb), lb
 
 

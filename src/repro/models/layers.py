@@ -205,7 +205,7 @@ def attention_chunked(
     pb = positions_kv.reshape(b, nblk, block_kv).swapaxes(0, 1)
 
     def step(carry, blk):
-        m, l, acc = carry                       # (B,K,G,Sq), same, (B,K,G,Sq,D)
+        m, lse, acc = carry                     # (B,K,G,Sq), same, (B,K,G,Sq,D)
         kblk, vblk, pkv = blk
         s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kblk,
                        preferred_element_type=jnp.float32) * scale
@@ -224,7 +224,7 @@ def attention_chunked(
         alpha = jnp.where(jnp.isinf(m_new), 0.0, jnp.exp(m - m_new))
         p = jnp.where(jnp.isinf(m_new[..., None]), 0.0,
                       jnp.exp(s - m_new[..., None]))
-        l_new = l * alpha + jnp.sum(p, axis=-1)
+        l_new = lse * alpha + jnp.sum(p, axis=-1)
         acc_new = acc * alpha[..., None] + jnp.einsum(
             "bkgqs,bskd->bkgqd", p.astype(vblk.dtype), vblk,
             preferred_element_type=jnp.float32)
@@ -233,8 +233,8 @@ def attention_chunked(
     m0 = jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)
     l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
     a0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    (m, lse, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(lse, 1e-30)[..., None]
     out = jnp.moveaxis(out, 3, 1).reshape(b, sq, hq, d)
     return out.astype(q.dtype)
 

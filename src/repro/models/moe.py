@@ -22,8 +22,6 @@ GShard/Switch semantics.  A load-balance aux loss is returned.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax import lax

@@ -10,8 +10,6 @@ toy.  Decode scans (params, kv-cache) jointly and emits the new cache.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -91,8 +91,8 @@ def constrain(x: jax.Array, *logical) -> jax.Array:
         "experts": rules.present(mesh, rules.expert_axes),
     }
     spec = []
-    for dim, l in enumerate(logical):
-        axes = name_map.get(l) if l else None
+    for dim, lg in enumerate(logical):
+        axes = name_map.get(lg) if lg else None
         if axes and x.shape[dim] % _axis_size(mesh, axes) == 0:
             spec.append(axes if len(axes) > 1 else axes[0])
         else:

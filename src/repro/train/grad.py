@@ -63,7 +63,9 @@ def compress_grads(grads, err):
         return deq, g32 - deq
 
     flat = jax.tree.map(leaf, grads, err)
-    istup = lambda x: isinstance(x, tuple)
+
+    def istup(x):
+        return isinstance(x, tuple)
     deq = jax.tree.map(lambda t: t[0], flat, is_leaf=istup)
     new_err = jax.tree.map(lambda t: t[1], flat, is_leaf=istup)
     return deq, new_err

@@ -49,7 +49,8 @@ def adamw(lr: Callable | float, b1: float = 0.9, b2: float = 0.95,
     lr_fn = lr if callable(lr) else constant_lr(lr)
 
     def init(params):
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return {"mu": jax.tree.map(zeros, params),
                 "nu": jax.tree.map(zeros, params)}
 
@@ -132,7 +133,9 @@ def adafactor(lr: Callable | float, eps: float = 1e-30,
         # state has one extra dict level below each grad leaf; tree.map
         # flattens up to grads' leaves and passes the state dict whole.
         flat = jax.tree.map(upd, grads, state, params)
-        istup = lambda x: isinstance(x, tuple)
+
+        def istup(x):
+            return isinstance(x, tuple)
         new_params = jax.tree.map(lambda t2: t2[0], flat, is_leaf=istup)
         new_state = jax.tree.map(lambda t2: t2[1], flat, is_leaf=istup)
         return new_params, new_state

@@ -12,8 +12,6 @@ launch/dryrun.py do this); on a single device just jit it.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P

@@ -1,0 +1,82 @@
+"""The benchmark driver's CLI contract: `--only` with an unknown name must
+fail loudly (it used to select nothing and exit 0 — "all benches
+complete"), and `--json` must serialize every bench's time_fn records
+keyed by bench name."""
+
+import json
+import sys
+import types
+
+import pytest
+
+from benchmarks import common
+from benchmarks import run as bench_run
+
+
+@pytest.fixture
+def fake_bench(monkeypatch):
+    """Swap BENCHES for a single stub module so main() runs in ~ms."""
+    mod = types.ModuleType("_fake_bench")
+
+    def run(quick=False):
+        common.time_fn(lambda: 1, warmup=0, iters=1, label="stub")
+        return "stub ok"
+
+    mod.run = run
+    monkeypatch.setitem(sys.modules, "_fake_bench", mod)
+    monkeypatch.setattr(
+        bench_run, "BENCHES", [("fake", "_fake_bench", "stub bench")])
+    return mod
+
+
+def test_only_unknown_name_fails(capsys):
+    with pytest.raises(SystemExit) as e:
+        bench_run.main(["--only", "nope"])
+    assert e.value.code == 2
+    err = capsys.readouterr().err
+    assert "unknown bench name(s)" in err
+    # the valid list is printed so the typo is one glance from fixed
+    for name, _, _ in bench_run.BENCHES:
+        assert name in err
+
+
+def test_only_mixed_known_unknown_fails(fake_bench):
+    with pytest.raises(SystemExit) as e:
+        bench_run.main(["--only", "fake,typo"])
+    assert e.value.code == 2
+
+
+def test_only_known_name_runs(fake_bench, capsys):
+    bench_run.main(["--only", "fake"])
+    out = capsys.readouterr().out
+    assert "stub ok" in out and "all benches complete" in out
+
+
+def test_json_records_keyed_by_bench(fake_bench, tmp_path):
+    path = tmp_path / "bench.json"
+    bench_run.main(["--only", "fake", "--json", str(path)])
+    payload = json.loads(path.read_text())
+    assert payload["failures"] == []
+    records = payload["benches"]["fake"]
+    assert len(records) == 1
+    assert records[0]["label"] == "stub"
+    assert {"median_s", "min_s", "iters"} <= set(records[0])
+
+
+def test_json_written_even_on_failure(monkeypatch, tmp_path):
+    mod = types.ModuleType("_broken_bench")
+
+    def run(quick=False):
+        raise RuntimeError("boom")
+
+    mod.run = run
+    monkeypatch.setitem(sys.modules, "_broken_bench", mod)
+    monkeypatch.setattr(
+        bench_run, "BENCHES", [("broken", "_broken_bench", "boom")])
+    path = tmp_path / "bench.json"
+    with pytest.raises(SystemExit) as e:
+        bench_run.main(["--json", str(path)])
+    assert e.value.code == 1
+    payload = json.loads(path.read_text())
+    assert payload["failures"] == ["broken"]
+    assert payload["benches"]["broken"] == []

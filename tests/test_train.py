@@ -28,7 +28,8 @@ def test_optimizer_minimizes_quadratic(make_opt):
     opt = make_opt(0.1, weight_decay=0.0)
     params = {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray(5.0)}
     state = opt.init(params)
-    loss = lambda p: jnp.sum(p["w"] ** 2) + p["b"] ** 2
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
     for step in range(200):
         g = jax.grad(loss)(params)
         params, state = opt.update(g, state, params, jnp.asarray(step))
@@ -59,7 +60,8 @@ def test_grad_accumulation_equivalence():
     params = api.init_params(RNG, cfg)
     batch = {"tokens": jax.random.randint(RNG, (4, 16), 0, cfg.vocab_size),
              "labels": jax.random.randint(RNG, (4, 16), 0, cfg.vocab_size)}
-    loss_fn = lambda p, b: api.loss_fn(p, b, cfg)
+    def loss_fn(p, b):
+        return api.loss_fn(p, b, cfg)
     _, _, g1 = G.accumulate_grads(loss_fn, params, batch, 1)
     _, _, g4 = G.accumulate_grads(loss_fn, params, batch, 4)
     diffs = [float(jnp.max(jnp.abs(a.astype(jnp.float32) -
@@ -89,7 +91,8 @@ def _tiny_setup():
     opt = make_optimizer(cfg, peak_lr=1e-3, warmup=2, total_steps=40)
     step = jax.jit(make_train_step(cfg, opt))
     stream = make_stream(cfg, batch=2, seq_len=16)
-    init = lambda: init_state(RNG, cfg, opt)
+    def init():
+        return init_state(RNG, cfg, opt)
     return cfg, opt, step, stream, init
 
 
