@@ -32,7 +32,8 @@ from repro.core.bands import (
     reduce_banded_ih,
     spill_banded_ih,
 )
-from repro.core.region_query import banded_likelihood_map
+from repro.core.hsource import BandedH
+from repro.core.region_query import likelihood_map
 from repro.data import video_frames
 
 
@@ -66,8 +67,9 @@ def run(quick: bool = False) -> str:
     budget = plan_full.full_h_bytes // 8
     target = jnp.ones((bins,), jnp.float32) * (48 * 48 / bins)
     stats: dict = {}
-    lmap = banded_likelihood_map(
-        iter_banded_ih(img, bins, memory_budget_bytes=budget, backend="jnp"),
+    lmap = likelihood_map(
+        BandedH(iter_banded_ih(img, bins, memory_budget_bytes=budget,
+                               backend="jnp")),
         target, (48, 48), distances.intersection, stride=16, stats=stats)
     # The acceptance claim: exact O(1) analytics for a frame whose full H
     # exceeds the budget, without ever allocating (b, h, w).

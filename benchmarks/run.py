@@ -1,6 +1,9 @@
 """Benchmark driver: one bench per paper table/figure + the roofline
 aggregation.  `python -m benchmarks.run [--quick|--smoke] [--only NAME]
-[--json PATH]`.
+[--json PATH] [--list]`.
+
+`--list` prints every bench name with its one-line description and
+exits 0 (the CLI's discovery surface; tested in tests/test_bench_run.py).
 
 `--smoke` is the CI mode: quick sizes AND single-iteration timing
 (benchmarks.common.SMOKE), so every bench script still executes end to
@@ -31,6 +34,8 @@ BENCHES = [
     ("bands", "benchmarks.bench_bands",
      "paper §4.6 + arXiv:1510.05142 — band streaming under a "
      "memory budget"),
+    ("engine", "benchmarks.bench_engine",
+     "ISSUE 4 — plan/execute engine overhead vs hand-routed calls"),
     ("multidevice", "benchmarks.bench_multidevice",
      "paper Fig. 16/17 — multi-device bin/spatial sharding"),
     ("speedup", "benchmarks.bench_speedup",
@@ -50,7 +55,15 @@ def main(argv=None):
                     help="comma-separated bench names")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write per-bench time_fn records as JSON")
+    ap.add_argument("--list", action="store_true",
+                    help="print bench names with descriptions and exit 0")
     args = ap.parse_args(argv)
+
+    if args.list:
+        width = max(len(name) for name, _, _ in BENCHES)
+        for name, _, desc in BENCHES:
+            print(f"{name.ljust(width)}  {desc}")
+        return
 
     valid = [name for name, _, _ in BENCHES]
     only = None

@@ -1,12 +1,12 @@
-"""End-to-end real-time video analytics driver (the paper's use case).
+"""End-to-end real-time video analytics driver (the paper's use case),
+driven through the plan/execute engine (core/engine.py).
 
 Pipeline per frame (all on-accelerator once the frame is staged):
-  1. WF-TiS integral histogram, streamed through the batched frame path —
-     `IntegralHistogram.map_frames` microbatches frames per dispatch and
-     keeps dispatches in flight (paper §4.4 dual-buffering + the
-     frame-batch axis of arXiv:1011.0235)
-  2. multi-target fragments tracker update (paper ref. [13]) consuming
-     the streamed H via `step_on_h` — the frame's integral histogram is
+  1. WF-TiS integral histograms streamed by `HistogramEngine.map_frames`
+     — the planner sizes the microbatch (arXiv:1011.0235 adaptive
+     batching) and keeps dispatches in flight (paper §4.4 dual-buffering)
+  2. multi-target fragments tracker update (paper ref. [13]) riding the
+     same engine via `step_on_h` — the frame's integral histogram is
      computed ONCE and shared by every target's O(1) candidate queries
   3. batched likelihood maps (abstract: "feature likelihood maps ... play
      a critical role"): the last `--map-frames` H's are stacked and ONE
@@ -14,13 +14,14 @@ Pipeline per frame (all on-accelerator once the frame is staged):
      frame
   4. the large-frame regime (paper §4.6): a frame `--large-scale`x the
      stream size is scored under a memory budget an eighth of its full H
-     footprint — row bands stream through the carry-aware kernels
-     (core/bands.py) and the likelihood map is exact without the
-     (b, h, w) H ever existing
+     footprint.  A second engine plans it — `plan.explain()` shows the
+     banded representation it picked — and the exact likelihood map is
+     computed without the (b, h, w) H ever existing.
 
-For offline clips, `FragmentTracker.track` runs the same math as one
-batched-H + `lax.scan` loop per chunk (see benchmarks/bench_analytics.py
-for the frames/sec delta vs the per-frame loop).
+Every stage goes through ONE entry point (`engine.run` / `map_frames`);
+the dense / banded / spilled / sharded representation behind a request
+is the planner's choice, not hand-routed (the pre-engine forks survive
+as deprecation shims; see README "Migration").
 
     PYTHONPATH=src python examples/video_analytics.py [--frames 40]
                    [--batch auto|N] [--targets 2] [--large-scale 2]
@@ -34,7 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import distances
-from repro.core.integral_histogram import IntegralHistogram
+from repro.core.engine import HistogramEngine, LikelihoodQuery
 from repro.core.region_query import likelihood_map, region_histogram
 from repro.core.tracking import FragmentTracker, TrackerConfig
 from repro.data import video_frames
@@ -46,7 +47,7 @@ def main(argv=None):
     ap.add_argument("--hw", type=int, nargs=2, default=(480, 640))
     ap.add_argument("--bins", type=int, default=16)
     ap.add_argument("--batch", default="auto",
-                    help='frames per dispatch: "auto" or an int')
+                    help='frames per dispatch: "auto" (planner) or an int')
     ap.add_argument("--depth", type=int, default=2,
                     help="dispatches kept in flight (1 = synchronous)")
     ap.add_argument("--targets", type=int, default=2,
@@ -59,19 +60,18 @@ def main(argv=None):
                          "(0 skips the banded large-frame demo)")
     args = ap.parse_args(argv)
     h, w = args.hw
-    batch = args.batch if args.batch == "auto" else int(args.batch)
 
     frames = video_frames(h, w, args.frames, seed=3)
     print(f"{args.frames} frames of {h}x{w}, {args.bins} bins, "
-          f"batch={batch}, depth={args.depth}, targets={args.targets}")
+          f"batch={args.batch}, depth={args.depth}, "
+          f"targets={args.targets}")
 
-    # --- stage 1: batched + double-buffered integral histograms ----------
-    ih = IntegralHistogram(num_bins=args.bins, method="wf_tis",
-                           backend="auto")
+    # --- stage 1: one engine plans + streams the integral histograms ------
+    engine = HistogramEngine(args.bins, method="wf_tis", backend="auto")
 
-    # --- stage 2: multi-target tracker rides the streamed H --------------
-    tracker = FragmentTracker(TrackerConfig(num_bins=args.bins,
-                                            search_radius=10))
+    # --- stage 2: multi-target tracker rides the same engine ---------------
+    tracker = FragmentTracker(
+        TrackerConfig(num_bins=args.bins, search_radius=10), engine=engine)
     size = 48
     bboxes = np.stack([
         [r, c, r + size - 1, c + size - 1]
@@ -80,18 +80,32 @@ def main(argv=None):
             np.linspace(w // 4, 3 * w // 4 - size, args.targets).astype(int))
     ])
     state = tracker.init(jnp.asarray(frames[0]), bboxes)
-    target_hists = region_histogram(ih(jnp.asarray(frames[0])),
-                                    state["bbox"])          # (t, bins)
+    target_hists = region_histogram(
+        engine.compute_dense(jnp.asarray(frames[0])), state["bbox"])
 
     t0 = time.perf_counter()
     boxes, tail_H = [], []
-    for H in ih.map_frames(frames, batch_size=batch, depth=args.depth):
+    if args.batch == "auto":
+        stream = engine.map_frames(frames, depth=args.depth)
+    else:
+        # explicit microbatch: bypass the planner's choice for comparison
+        # (map_frames is eager — it plans off the first frame — so only
+        # ONE of the two streams may ever be constructed)
+        from repro.core.integral_histogram import IntegralHistogram
+
+        stream = IntegralHistogram(
+            num_bins=args.bins, method="wf_tis", backend="auto"
+        ).map_frames(frames, batch_size=int(args.batch), depth=args.depth)
+    for H in stream:
         state = tracker.step_on_h(state, H)     # H shared across targets
         boxes.append(np.asarray(state["bbox"]))
         tail_H.append(H)
         if len(tail_H) > args.map_frames:
             tail_H.pop(0)
     dt = time.perf_counter() - t0
+    if args.batch == "auto" and engine.last_plan is not None:
+        print(f"planned microbatch: {engine.last_plan.microbatch} "
+              f"frame(s)/dispatch ({engine.last_plan.representation})")
 
     # --- stage 3: one batched likelihood_map over the trailing frames ----
     Hs = jnp.stack(tail_H)                      # (k, bins, h, w)
@@ -109,25 +123,27 @@ def main(argv=None):
     print(f"likelihood maps {lmap.shape} (batched over {lmap.shape[0]} "
           f"frames), last-frame peak={float(lmap[-1].max()):.3f} at {peak}")
 
-    # --- stage 4: band-streamed large frame under a memory budget --------
+    # --- stage 4: the large-frame regime, planned under a budget ----------
     if args.large_scale:
         big_h, big_w = h * args.large_scale, w * args.large_scale
         big = np.tile(frames[-1], (args.large_scale, args.large_scale))
         full_bytes = 4 * args.bins * big_h * big_w
         budget = full_bytes // 8
-        stats = {}
+        big_engine = HistogramEngine(args.bins, method="wf_tis",
+                                     backend="auto",
+                                     memory_budget_bytes=budget)
         t0 = time.perf_counter()
-        blmap = ih.banded_likelihood_map(
-            ih.map_bands(big, memory_budget_bytes=budget),
+        out = big_engine.run(big, [LikelihoodQuery(
             target_hists[0], (size, size), distances.intersection,
-            stride=16, stats=stats)
-        jax.block_until_ready(blmap)
+            stride=16)])
+        blmap = jax.block_until_ready(out.results[0])
         dt = time.perf_counter() - t0
-        print(f"banded {big_h}x{big_w}: budget {budget / 2**20:.0f} MB "
-              f"(full H {full_bytes / 2**20:.0f} MB), "
-              f"{stats['num_bands']} bands, peak proxy "
-              f"{stats['peak_bytes'] / 2**20:.0f} MB, "
-              f"map {tuple(blmap.shape)} in {dt:.2f}s")
+        print(f"\nlarge-frame plan ({big_h}x{big_w}, budget "
+              f"{budget / 2**20:.0f} MB vs full H "
+              f"{full_bytes / 2**20:.0f} MB):")
+        print(out.plan.explain())
+        print(f"banded likelihood map {tuple(blmap.shape)} in {dt:.2f}s — "
+              "full H never materialized")
 
 
 if __name__ == "__main__":

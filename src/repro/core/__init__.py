@@ -1,9 +1,36 @@
-"""Core: the paper's contribution — integral histograms and their uses."""
+"""Core: the paper's contribution — integral histograms and their uses.
+
+The plan/execute surface (``WorkloadSpec`` / ``plan`` /
+``HistogramEngine`` and the ``HSource`` protocol) is re-exported lazily:
+``repro.core.engine`` transitively imports ``repro.kernels.ops``, which
+itself imports this package, so an eager import here would make the
+package unimportable whenever ``kernels.ops`` is the entry module.
+"""
 
 from repro.core.binning import PAD_BIN, bin_indices, one_hot_bins
 from repro.core.scans import METHODS, apply_carry, cw_b, cw_sts, cw_tis, wf_tis
 
+_ENGINE_EXPORTS = {
+    "WorkloadSpec", "ExecutionPlan", "plan", "HistogramEngine",
+    "EngineResult", "RegionQuery", "SlidingWindowQuery", "LikelihoodQuery",
+    "MultiScaleQuery",
+}
+_HSOURCE_EXPORTS = {"HSource", "DenseH", "BandedH", "ShardedH", "as_hsource"}
+
 __all__ = [
     "PAD_BIN", "bin_indices", "one_hot_bins",
     "METHODS", "apply_carry", "cw_b", "cw_sts", "cw_tis", "wf_tis",
+    *sorted(_ENGINE_EXPORTS), *sorted(_HSOURCE_EXPORTS),
 ]
+
+
+def __getattr__(name):
+    if name in _ENGINE_EXPORTS:
+        from repro.core import engine
+
+        return getattr(engine, name)
+    if name in _HSOURCE_EXPORTS:
+        from repro.core import hsource
+
+        return getattr(hsource, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

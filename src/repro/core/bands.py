@@ -45,6 +45,7 @@ from typing import Callable, Iterable, Iterator
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.hsource import HSource
 from repro.kernels.ops import integral_histogram
 
 # fp32 represents consecutive integers exactly only below 2**24; beyond it
@@ -256,13 +257,18 @@ def reduce_banded_ih(image, num_bins: int, reduce_fn, init=None, **kwargs):
 
 
 @dataclasses.dataclass
-class SpilledIH:
+class SpilledIH(HSource):
     """A banded integral histogram spilled host-side under a storage policy.
 
     ``bands[i]`` holds rows ``spans[i]`` as (..., b, bh, w) in the policy
     dtype.  Integer policies store H modulo 2**bits; four-corner queries
     run in the same modular arithmetic, so any region whose true count
     fits the dtype reads back exactly (``uint16``: <= 65535 pixels).
+
+    An ``HSource`` (core/hsource.py): every unified analytics entry point
+    — region queries, sliding windows, likelihood maps, multi-scale
+    search — runs straight off the spill through ``rows()``, with the
+    policy's exact-count bound enforced per query.
     """
 
     num_bins: int
@@ -276,6 +282,10 @@ class SpilledIH:
     @property
     def nbytes(self) -> int:
         return sum(b.nbytes for b in self.bands)
+
+    @property
+    def exact_region_bound(self) -> int:
+        return STORAGE_POLICIES[self.storage][1]
 
     def _band_of(self, r: int) -> int:
         for i, (r0, r1) in enumerate(self.spans):
@@ -294,37 +304,18 @@ class SpilledIH:
             out[..., k, :] = self.bands[i][..., int(r) - self.spans[i][0], :]
         return out
 
-    def region_histogram(self, rects) -> jnp.ndarray:
-        """O(1) region queries without assembling H: corner rows only ever
-        touch <= 2 bands per rect.  Same contract as
-        ``region_query.region_histogram``; returns fp32."""
-        from repro.core.region_query import compressed_region_histogram
-
-        rects = np.asarray(rects)
-        _, bound = STORAGE_POLICIES[self.storage]
-        area = (rects[..., 2] - rects[..., 0] + 1) * (
-            rects[..., 3] - rects[..., 1] + 1
-        )
-        if int(np.max(area)) > bound:
-            raise ValueError(
-                f"region of {int(np.max(area))} pixels exceeds the "
-                f"{self.storage} storage policy's exact-count bound "
-                f"{bound}; spill with a wider policy"
-            )
-        from repro.core.region_query import corner_rows
-
-        needed = corner_rows(rects)
-        Hc = self.rows(needed)
-        out = compressed_region_histogram(
-            jnp.asarray(Hc), jnp.asarray(needed), jnp.asarray(rects)
-        )
-        return out.astype(jnp.float32)
+    # region_histogram / sliding windows / likelihood maps are inherited
+    # from HSource: Eq. 2 against rows(), area-validated per query against
+    # exact_region_bound, modular through the integer policies.
 
     def assemble(self) -> np.ndarray:
         """Materialize full (..., b, h, w) H as fp32 (small frames only)."""
         return np.concatenate(
             [b.astype(np.float32) for b in self.bands], axis=-2
         )
+
+    def dense(self):
+        return jnp.asarray(self.assemble())
 
 
 def spill_banded_ih(

@@ -245,20 +245,13 @@ def distributed_region_query(H_sharded, rects, mesh, bin_axis="model"):
     shard; results concatenate over the bin axis (no collective needed —
     histograms over bins are embarrassingly parallel, paper §4.6).
 
-    Rank-polymorphic over frame batching like ``region_histogram``: H may
-    be (b, h, w) or a stack (..., b, h, w) sharded over its bin axis;
-    rects (..., 4) are replicated.  Returns (*H_lead, *rects_lead, b)
-    with bins sharded over ``bin_axis``."""
-    from repro.core.region_query import region_histogram
+    Thin dispatch over the unified H-representation protocol: ``ShardedH``
+    (core/hsource.py) owns the shard_map fast path; this wrapper survives
+    for callers that hold a raw sharded array.  Rank-polymorphic over
+    frame batching like ``region_histogram``; returns
+    (*H_lead, *rects_lead, b) with bins sharded over ``bin_axis``."""
+    from repro.core.hsource import ShardedH
 
-    def shard_fn(h_local, r):
-        return region_histogram(h_local, r)
-
-    h_lead = H_sharded.ndim - 3
-    return shard_map(
-        shard_fn,
-        mesh=mesh,
-        in_specs=(P(*([None] * h_lead), bin_axis, None, None), P()),
-        out_specs=P(*([None] * (h_lead + rects.ndim - 1)), bin_axis),
-        check_vma=False,
-    )(H_sharded, rects)
+    return ShardedH(
+        H_sharded, mesh, kind="bin", bin_axis=bin_axis
+    ).region_histogram(rects)

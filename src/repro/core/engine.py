@@ -1,0 +1,630 @@
+"""Plan/execute engine: one entry point over the four execution paths.
+
+PRs 1-3 left callers hand-selecting among seven functions — monolithic
+``kernels/ops.integral_histogram``, batched ``map_frames``, banded
+``core/bands.py``, sharded ``core/distributed.py``, each with forked
+analytics.  The paper treats these as ONE computation under different
+resource mappings (§4's four kernel mappings, §4.4 double-buffering,
+§4.6 multi-GPU bin mapping); this module makes that explicit:
+
+    spec = WorkloadSpec(height=480, width=640, num_bins=32,
+                        memory_budget_bytes=64 << 20)
+    p = plan(spec)            # deterministic, inspectable, testable
+    print(p.explain())        # why this method/backend/band/shard choice
+
+``plan`` absorbs the decisions previously buried in call sites:
+
+  * method/backend/tile resolution (``integral_histogram``'s "auto");
+  * microbatch sizing (``pipeline.auto_batch_size`` — arXiv:1011.0235's
+    adaptive batching);
+  * band planning + storage policy under ``memory_budget_bytes``
+    (``bands.plan_bands`` — the auto-banding that lived inside
+    ``integral_histogram``), following Ehsan et al.'s memory-efficient
+    design (arXiv:1510.05138);
+  * sharding layout when a mesh is given (bin sharding — the paper's
+    multi-GPU scheme — when the bins divide the mesh axis, else spatial).
+
+``HistogramEngine`` composes plan -> compute -> query: ``engine.run``
+returns an ``HSource`` (core/hsource.py) plus the results of any queries,
+and the representation behind it — dense array, band stream, host spill,
+or mesh-sharded — is the planner's choice, not the caller's.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator
+
+import jax
+import numpy as np
+
+from repro.core.bands import (
+    BandPlan,
+    STORAGE_POLICIES,
+    plan_bands,
+    validate_storage_policy,
+)
+from repro.core.hsource import (
+    BandedH,
+    DenseH,
+    HSource,
+    PrefetchedRowsH,
+    ShardedH,
+)
+from repro.core.pipeline import auto_batch_size
+
+REPRESENTATIONS = ("dense", "banded", "spilled", "sharded")
+
+
+# ---------------------------------------------------------------------------
+# spec
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """Everything the planner needs to know about a request.
+
+    ``num_frames`` is the request's batch/stream arity: frames per call
+    for stacked requests, ``None`` for an open-ended stream (microbatch
+    then comes purely from the per-frame footprint).  ``mesh`` switches
+    to the multi-device mappings; ``memory_budget_bytes`` bounds the live
+    H footprint (banding); ``storage`` selects a host spill policy
+    (core/bands.py STORAGE_POLICIES) and implies the spilled
+    representation."""
+
+    height: int
+    width: int
+    num_bins: int = 32
+    num_frames: int | None = 1
+    dtype: str = "uint8"
+    value_range: int = 256
+    method: str = "wf_tis"
+    backend: str = "auto"
+    tile: int = 128
+    bin_block: int = 8
+    use_mxu: bool = True
+    interpret: bool = False
+    memory_budget_bytes: int | None = None
+    storage: str | None = None
+    mesh: object | None = None          # jax.sharding.Mesh
+    sharding: str = "auto"              # "auto" | "bin" | "spatial"
+    bin_axis: str = "model"
+    row_axis: str = "data"
+
+    @property
+    def per_frame_h_bytes(self) -> int:
+        """The (num_bins, h, w) fp32 H footprint of one frame."""
+        return 4 * self.num_bins * self.height * self.width
+
+
+# ---------------------------------------------------------------------------
+# plan
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """The planner's resolved decisions — inspectable and testable.
+
+    ``representation`` names the HSource the engine will build; the
+    remaining fields are the knobs the execute step passes down.  Plans
+    are plain frozen dataclasses: equal specs produce equal plans
+    (asserted in tests/test_engine.py)."""
+
+    spec: WorkloadSpec
+    representation: str                 # dense | banded | spilled | sharded
+    method: str
+    backend: str                        # resolved: "pallas" | "jnp"
+    tile: int
+    bin_block: int
+    microbatch: int
+    band_plan: BandPlan | None
+    storage: str | None
+    sharding: str | None                # None | "bin" | "spatial"
+
+    def explain(self) -> str:
+        """Human-readable plan rationale (golden-snapshot tested)."""
+        s = self.spec
+        per_frame = s.per_frame_h_bytes
+        lines = [
+            "ExecutionPlan",
+            f"  workload        : {s.height}x{s.width} {s.dtype} frames, "
+            f"{s.num_bins} bins, "
+            + ("open stream" if s.num_frames is None
+               else f"{s.num_frames} frame(s)/request"),
+            f"  full H          : {per_frame} B/frame "
+            f"({per_frame / 2**20:.1f} MiB fp32)",
+            f"  representation  : {self.representation}",
+            f"  method/backend  : {self.method} / {self.backend}",
+            f"  tile/bin_block  : {self.tile} / {self.bin_block}",
+            f"  microbatch      : {self.microbatch} frame(s)/dispatch",
+        ]
+        if self.band_plan is None:
+            budget = s.memory_budget_bytes
+            why = ("no memory budget" if budget is None
+                   else f"fits the {budget} B budget in one band")
+            lines.append(f"  bands           : none ({why})")
+        else:
+            bp = self.band_plan
+            lines.append(
+                f"  bands           : {bp.num_bands} x {bp.band_h} rows "
+                f"({bp.band_bytes} B/band <= "
+                f"{s.memory_budget_bytes} B budget)"
+            )
+        if self.storage is None:
+            lines.append("  storage         : device fp32")
+        else:
+            bound = STORAGE_POLICIES[self.storage][1]
+            lines.append(
+                f"  storage         : host spill {self.storage} "
+                f"(exact regions <= {bound} px)"
+            )
+        if self.sharding is None:
+            lines.append("  sharding        : none")
+        else:
+            axis = s.bin_axis if self.sharding == "bin" else s.row_axis
+            size = dict(s.mesh.shape)[axis]
+            lines.append(
+                f"  sharding        : {self.sharding} over mesh axis "
+                f"{axis!r} ({size} devices)"
+            )
+        return "\n".join(lines)
+
+
+def _resolve_backend(backend: str, method: str) -> str:
+    """The "auto" rule from kernels/ops.py, centralized."""
+    from repro.kernels.ops import PALLAS_METHODS
+
+    if backend == "auto":
+        on_tpu = jax.default_backend() == "tpu"
+        return "pallas" if on_tpu and method in PALLAS_METHODS else "jnp"
+    if backend == "pallas" and method not in PALLAS_METHODS:
+        raise ValueError(
+            f"method {method!r} has no Pallas kernel (Pallas methods: "
+            f"{sorted(PALLAS_METHODS)}); use backend='auto' or 'jnp'"
+        )
+    if backend not in ("pallas", "jnp"):
+        raise ValueError(f"unknown backend {backend!r}")
+    return backend
+
+
+def plan(spec: WorkloadSpec) -> ExecutionPlan:
+    """Deterministically map a workload onto an execution path.
+
+    The decision tree (documented here because it IS the product):
+
+      1. mesh given        -> sharded.  "auto" picks the paper's bin
+         mapping when num_bins divides the bin axis, else the spatial
+         (row-strip) mapping.  A memory budget on top bands the stream
+         (iter_banded_sharded_ih).
+      2. budget given      -> band-plan the frame; > 1 band means the
+         monolithic H breaks the budget: banded (stream) or spilled
+         (host storage policy).  One band fits: dense.
+      3. storage given     -> spilled even without a budget (single
+         band), because the caller asked for host residency.
+      4. otherwise         -> dense.
+
+    Microbatch comes from the per-frame H footprint (auto_batch_size),
+    capped by ``num_frames``; banded/spilled paths stream whole frames,
+    so their microbatch is the full request arity.
+    """
+    backend = _resolve_backend(spec.backend, spec.method)
+    if spec.method not in _known_methods():
+        raise ValueError(f"unknown method {spec.method!r}")
+    nf = spec.num_frames
+    microbatch = auto_batch_size(spec.num_bins, spec.height, spec.width)
+    if nf is not None:
+        microbatch = max(1, min(microbatch, nf))
+
+    if spec.storage is not None:
+        validate_storage_policy(spec.storage, spec.height, spec.width)
+        if spec.mesh is not None:
+            raise ValueError(
+                "storage policies spill host-side; combine them with "
+                "banding, not with a mesh"
+            )
+
+    band_frames = 1 if nf is None else nf
+    sharding = None
+    band_plan = None
+    if spec.mesh is not None:
+        mesh_shape = dict(spec.mesh.shape)
+        sharding = spec.sharding
+        if sharding == "auto":
+            divisible = (
+                spec.bin_axis in mesh_shape
+                and spec.num_bins % mesh_shape[spec.bin_axis] == 0
+            )
+            sharding = "bin" if divisible else "spatial"
+        if sharding not in ("bin", "spatial"):
+            raise ValueError(
+                f"unknown sharding {spec.sharding!r} (auto|bin|spatial)"
+            )
+        if sharding == "spatial" and nf is not None and nf != 1:
+            # spatial_sharded_ih shards the *row* axis of a single (h, w)
+            # frame; handing it an (n, h, w) stack would shard the frame
+            # axis instead and silently return garbage.  (num_frames=None
+            # — an open stream — is frames one at a time, which is fine;
+            # map_frames itself rejects sharded plans with its own error.)
+            raise ValueError(
+                "spatial (row-strip) sharding is single-frame; this "
+                f"request has num_frames={spec.num_frames} — make "
+                f"num_bins divisible by the {spec.bin_axis!r} mesh axis "
+                "for bin sharding, or submit frames one at a time"
+            )
+        row_multiple = (
+            mesh_shape[spec.row_axis] if sharding == "spatial" else 1
+        )
+        if spec.memory_budget_bytes is not None:
+            band_plan = plan_bands(
+                spec.height, spec.width, spec.num_bins,
+                memory_budget_bytes=spec.memory_budget_bytes,
+                num_frames=band_frames, row_multiple=row_multiple,
+            )
+            if band_plan.num_bands == 1:
+                band_plan = None
+        return ExecutionPlan(
+            spec=spec, representation="sharded", method=spec.method,
+            backend=backend, tile=spec.tile, bin_block=spec.bin_block,
+            microbatch=microbatch, band_plan=band_plan,
+            storage=None, sharding=sharding,
+        )
+
+    if spec.memory_budget_bytes is not None:
+        band_plan = plan_bands(
+            spec.height, spec.width, spec.num_bins,
+            memory_budget_bytes=spec.memory_budget_bytes,
+            num_frames=band_frames,
+        )
+        if band_plan.num_bands == 1 and spec.storage is None:
+            band_plan = None
+    elif spec.storage is not None:
+        band_plan = plan_bands(spec.height, spec.width, spec.num_bins,
+                               num_frames=band_frames)
+
+    if spec.storage is not None:
+        representation = "spilled"
+    elif band_plan is not None:
+        representation = "banded"
+    else:
+        representation = "dense"
+    if representation in ("banded", "spilled") and nf is not None:
+        microbatch = nf        # bands stream the whole request at once
+    if representation == "dense" and spec.memory_budget_bytes is not None:
+        # One band fits the budget, but the *dispatch* is microbatch
+        # frames wide — cap it so the budget bounds the live H too.
+        microbatch = max(
+            1, min(microbatch,
+                   spec.memory_budget_bytes // spec.per_frame_h_bytes)
+        )
+
+    return ExecutionPlan(
+        spec=spec, representation=representation, method=spec.method,
+        backend=backend, tile=spec.tile, bin_block=spec.bin_block,
+        microbatch=microbatch, band_plan=band_plan,
+        storage=spec.storage, sharding=None,
+    )
+
+
+def _known_methods():
+    from repro.core import scans
+
+    return scans.METHODS
+
+
+# ---------------------------------------------------------------------------
+# queries
+# ---------------------------------------------------------------------------
+def _window_rows(source: HSource, window, stride) -> np.ndarray:
+    """The corner rows a sliding-window field reads (empty if no fit)."""
+    n_r, n_c, bot, top = source._window_lattices(window, stride)
+    if n_r <= 0 or n_c <= 0:
+        return np.zeros((0,), np.int64)
+    return np.unique(np.concatenate([bot, top[top >= 0]]))
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionQuery:
+    """O(1) region histograms of ``rects`` (Eq. 2)."""
+
+    rects: object
+
+    def apply(self, source: HSource):
+        return source.region_histogram(self.rects)
+
+    def needed_rows(self, source: HSource) -> np.ndarray:
+        from repro.core.region_query import corner_rows
+
+        return corner_rows(np.asarray(self.rects))
+
+
+@dataclasses.dataclass(frozen=True)
+class SlidingWindowQuery:
+    """Histograms of every (wh, ww) window at ``stride``."""
+
+    window: tuple[int, int]
+    stride: int = 1
+
+    def apply(self, source: HSource):
+        return source.sliding_window_histograms(self.window, self.stride)
+
+    def needed_rows(self, source: HSource) -> np.ndarray:
+        return _window_rows(source, self.window, self.stride)
+
+
+@dataclasses.dataclass(frozen=True)
+class LikelihoodQuery:
+    """Per-position similarity of window histograms to ``target``."""
+
+    target: object
+    window: tuple[int, int]
+    metric: object = None
+    stride: int = 1
+
+    def apply(self, source: HSource):
+        from repro.core import distances
+
+        metric = self.metric or distances.intersection
+        return source.likelihood_map(
+            self.target, self.window, metric, self.stride
+        )
+
+    def needed_rows(self, source: HSource) -> np.ndarray:
+        return _window_rows(source, self.window, self.stride)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiScaleQuery:
+    """Best-matching window across scales (rect, score, per-scale maps)."""
+
+    target: object
+    windows: tuple[tuple[int, int], ...]
+    metric: object = None
+    stride: int = 1
+
+    def apply(self, source: HSource):
+        from repro.core import distances
+
+        metric = self.metric or distances.intersection
+        return source.multi_scale_search(
+            self.target, self.windows, metric, self.stride
+        )
+
+    def needed_rows(self, source: HSource) -> np.ndarray:
+        rows = [_window_rows(source, wnd, self.stride)
+                for wnd in self.windows]
+        return (np.unique(np.concatenate(rows))
+                if rows else np.zeros((0,), np.int64))
+
+
+@dataclasses.dataclass
+class EngineResult:
+    """What ``HistogramEngine.run`` hands back."""
+
+    plan: ExecutionPlan
+    source: HSource
+    results: list
+
+
+def prefetch_rows(source: HSource, queries) -> PrefetchedRowsH | None:
+    """Union the corner rows every query needs and fetch them in ONE
+    ``rows()`` pass — a band stream runs once for the whole request.
+
+    Returns ``None`` (caller falls back to per-query access) when any
+    query cannot declare its rows up front or no rows are needed."""
+    needs = []
+    for q in queries:
+        declare = getattr(q, "needed_rows", None)
+        if declare is None:
+            return None
+        rows = declare(source)
+        if rows is None:
+            return None
+        needs.append(np.asarray(rows))
+    needed = (np.unique(np.concatenate(needs))
+              if needs else np.zeros((0,), np.int64))
+    if needed.size == 0:
+        return None
+    return PrefetchedRowsH(source, needed, source.rows(needed))
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+class HistogramEngine:
+    """Plan -> compute -> query facade.
+
+    Holds the workload-independent configuration (bins, method prefs,
+    budget, mesh); per-request geometry comes from the frames themselves:
+
+        engine = HistogramEngine(num_bins=32,
+                                 memory_budget_bytes=256 << 20)
+        out = engine.run(frames, [RegionQuery(rects),
+                                  LikelihoodQuery(target, (48, 48))])
+        out.plan.explain()       # why this path
+        out.results              # one entry per query
+
+    ``engine.last_plan`` keeps the most recent plan for inspection.
+    """
+
+    def __init__(
+        self,
+        num_bins: int = 32,
+        *,
+        method: str = "wf_tis",
+        backend: str = "auto",
+        tile: int = 128,
+        bin_block: int = 8,
+        use_mxu: bool = True,
+        interpret: bool = False,
+        value_range: int = 256,
+        memory_budget_bytes: int | None = None,
+        storage: str | None = None,
+        mesh=None,
+        sharding: str = "auto",
+        bin_axis: str = "model",
+        row_axis: str = "data",
+    ):
+        self.num_bins = num_bins
+        self.method = method
+        self.backend = backend
+        self.tile = tile
+        self.bin_block = bin_block
+        self.use_mxu = use_mxu
+        self.interpret = interpret
+        self.value_range = value_range
+        self.memory_budget_bytes = memory_budget_bytes
+        self.storage = storage
+        self.mesh = mesh
+        self.sharding = sharding
+        self.bin_axis = bin_axis
+        self.row_axis = row_axis
+        self.last_plan: ExecutionPlan | None = None
+
+    # -- planning -----------------------------------------------------------
+    def spec_for(
+        self, shape, dtype="uint8", *, num_frames: int | None = "infer"
+    ) -> WorkloadSpec:
+        """Derive the WorkloadSpec for an (h, w) / (n, h, w) request.
+
+        ``num_frames`` overrides the inferred request arity — pass ``None``
+        for an open-ended stream of (h, w) frames (map_frames does)."""
+        shape = tuple(shape)
+        if len(shape) == 2:
+            nf = 1 if num_frames == "infer" else num_frames
+        elif len(shape) == 3:
+            nf = shape[0]
+        else:
+            raise ValueError(f"expected (h, w) or (n, h, w), got {shape}")
+        return WorkloadSpec(
+            height=shape[-2], width=shape[-1], num_bins=self.num_bins,
+            num_frames=nf, dtype=str(dtype), value_range=self.value_range,
+            method=self.method, backend=self.backend, tile=self.tile,
+            bin_block=self.bin_block, use_mxu=self.use_mxu,
+            interpret=self.interpret,
+            memory_budget_bytes=self.memory_budget_bytes,
+            storage=self.storage, mesh=self.mesh, sharding=self.sharding,
+            bin_axis=self.bin_axis, row_axis=self.row_axis,
+        )
+
+    def plan_for(self, frames) -> ExecutionPlan:
+        p = plan(self.spec_for(np.shape(frames),
+                               getattr(frames, "dtype", "uint8")))
+        self.last_plan = p
+        return p
+
+    # -- execution ----------------------------------------------------------
+    def _kernel_kwargs(self, p: ExecutionPlan) -> dict:
+        return dict(
+            method=p.method, backend=p.backend, tile=p.tile,
+            bin_block=p.bin_block, use_mxu=p.spec.use_mxu,
+            interpret=p.spec.interpret, value_range=p.spec.value_range,
+        )
+
+    def compute_dense(self, frames):
+        """The raw (..., b, h, w) H — jit-traceable (no HSource wrapper);
+        what jitted consumers like FragmentTracker call."""
+        from repro.kernels.ops import integral_histogram
+
+        return integral_histogram(
+            frames, self.num_bins, method=self.method, backend=self.backend,
+            tile=self.tile, bin_block=self.bin_block, use_mxu=self.use_mxu,
+            interpret=self.interpret, value_range=self.value_range,
+        )
+
+    def compute(self, frames, p: ExecutionPlan | None = None) -> HSource:
+        """Execute the plan: frames -> the planned H representation."""
+        from repro.core import bands as bands_mod
+        from repro.kernels.ops import integral_histogram
+
+        if p is None:
+            p = self.plan_for(frames)
+        kw = self._kernel_kwargs(p)
+
+        if p.representation == "sharded":
+            from repro.core import distributed
+
+            s = p.spec
+            if p.band_plan is not None:
+                return BandedH(lambda: distributed.iter_banded_sharded_ih(
+                    frames, self.num_bins, s.mesh, sharding=p.sharding,
+                    band_h=p.band_plan.band_h, bin_axis=s.bin_axis,
+                    row_axis=s.row_axis, method=p.method, backend=p.backend,
+                    value_range=s.value_range,
+                ))
+            if p.sharding == "bin":
+                H = distributed.bin_sharded_ih(
+                    frames, self.num_bins, s.mesh, bin_axis=s.bin_axis,
+                    method=p.method, backend=p.backend,
+                    value_range=s.value_range,
+                )
+            else:
+                H = distributed.spatial_sharded_ih(
+                    frames, self.num_bins, s.mesh, row_axis=s.row_axis,
+                    method=p.method, backend=p.backend,
+                    value_range=s.value_range,
+                )
+            return ShardedH(H, s.mesh, kind=p.sharding,
+                            bin_axis=s.bin_axis, row_axis=s.row_axis)
+
+        if p.representation == "spilled":
+            return bands_mod.spill_banded_ih(
+                frames, self.num_bins, storage=p.storage,
+                plan=p.band_plan, **kw,
+            )
+
+        if p.representation == "banded":
+            return BandedH(lambda: bands_mod.iter_banded_ih(
+                frames, self.num_bins, plan=p.band_plan, **kw,
+            ))
+
+        return DenseH(integral_histogram(frames, self.num_bins, **kw))
+
+    def run(self, frames, queries: Iterable = ()) -> EngineResult:
+        """Plan, compute, and answer ``queries`` in order.
+
+        Multiple queries against a band-streamed plan share ONE stream:
+        the union of every query's corner rows is fetched in a single
+        ``rows()`` pass (``prefetch_rows``) instead of re-running the
+        banded kernel per query."""
+        p = self.plan_for(frames)
+        source = self.compute(frames, p)
+        queries = list(queries)
+        target = source
+        if len(queries) > 1 and isinstance(source, BandedH):
+            target = prefetch_rows(source, queries) or source
+        results = [q.apply(target) for q in queries]
+        return EngineResult(plan=p, source=source, results=results)
+
+    # -- streaming ----------------------------------------------------------
+    def map_frames(
+        self, frames: Iterable, *, depth: int = 2, device=None
+    ) -> Iterator[jax.Array]:
+        """Stream per-frame H's with planner-chosen microbatching and
+        ``depth`` dispatches in flight (paper §4.4 double-buffering) —
+        the planner-driven successor of ``IntegralHistogram.map_frames``."""
+        import itertools
+
+        from repro.core.pipeline import DoubleBufferedExecutor
+
+        frames = iter(frames)
+        try:
+            first = next(frames)
+        except StopIteration:
+            return iter(())
+        p = plan(self.spec_for(np.shape(first),
+                               getattr(first, "dtype", "uint8"),
+                               num_frames=None))
+        self.last_plan = p
+        if p.representation != "dense":
+            # Streaming yields one dense (b, h, w) H per frame; executing
+            # a banded/spilled/sharded plan here would silently ignore
+            # the budget/mesh/storage the engine was configured with.
+            raise ValueError(
+                f"map_frames streams dense per-frame H's, but the plan "
+                f"chose {p.representation!r} for {p.spec.height}x"
+                f"{p.spec.width}x{p.spec.num_bins}; run each frame "
+                "through engine.run()/compute() instead"
+            )
+        executor = DoubleBufferedExecutor(
+            self.compute_dense, depth=depth, device=device,
+            batch_size=p.microbatch,
+        )
+        return executor.map(itertools.chain([first], frames))

@@ -23,7 +23,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import region_query
-from repro.core.pipeline import auto_batch_size
 from repro.kernels.ops import integral_histogram as _compute
 
 
@@ -80,11 +79,12 @@ class IntegralHistogram:
         order.  This is the throughput path for video: see
         benchmarks/bench_batched.py for the frames/sec scaling.
 
-        ``batch_size="auto"`` sizes the microbatch from the per-frame
-        output footprint (num_bins * h * w fp32): small ROI-scale frames
-        are dispatch-bound and batch deep; full frames are cache-bound on
-        CPU and stay near batch 1 — the adaptive-batching idea of Koppaka
-        et al. (arXiv:1011.0235) restated for XLA dispatch.
+        ``batch_size="auto"`` asks the planner (core/engine.py) to size
+        the microbatch from the per-frame output footprint (num_bins * h
+        * w fp32): small ROI-scale frames are dispatch-bound and batch
+        deep; full frames are cache-bound on CPU and stay near batch 1 —
+        the adaptive-batching idea of Koppaka et al. (arXiv:1011.0235)
+        restated for XLA dispatch.
         """
         import itertools
 
@@ -100,8 +100,13 @@ class IntegralHistogram:
                 raise ValueError(
                     f'batch_size must be an int or "auto", got {batch_size!r}'
                 )
+            from repro.core import engine as _engine
+
             h, w = first.shape[-2:]
-            batch_size = auto_batch_size(self.num_bins, h, w)
+            batch_size = _engine.plan(_engine.WorkloadSpec(
+                height=h, width=w, num_bins=self.num_bins,
+                num_frames=None, method=self.method, backend=self.backend,
+            )).microbatch
 
         executor = DoubleBufferedExecutor(
             self, depth=depth, device=device, batch_size=batch_size
@@ -139,13 +144,31 @@ class IntegralHistogram:
             interpret=self.interpret, value_range=self.value_range,
         )
 
-    # ---- O(1) analytics on a computed H ----
+    def engine(self, **overrides):
+        """A ``HistogramEngine`` (core/engine.py) sharing this operator's
+        configuration — the planned successor to hand-routing between
+        ``__call__`` / ``map_frames`` / ``map_bands``:
+
+        >>> eng = ih.engine(memory_budget_bytes=256 << 20)
+        >>> out = eng.run(frame, [RegionQuery(rects)])
+        """
+        from repro.core.engine import HistogramEngine
+
+        kwargs = dict(
+            method=self.method, backend=self.backend, tile=self.tile,
+            bin_block=self.bin_block, use_mxu=self.use_mxu,
+            interpret=self.interpret, value_range=self.value_range,
+        )
+        kwargs.update(overrides)
+        return HistogramEngine(self.num_bins, **kwargs)
+
+    # ---- O(1) analytics on a computed H (array or any HSource) ----
     query = staticmethod(region_query.region_histogram)
     sliding_windows = staticmethod(region_query.sliding_window_histograms)
     likelihood_map = staticmethod(region_query.likelihood_map)
     multi_scale_search = staticmethod(region_query.multi_scale_search)
 
-    # ---- the same analytics over a band stream (H never materializes) ----
+    # ---- deprecated: the unified entry points above accept a BandedH ----
     banded_query = staticmethod(region_query.banded_region_histogram)
     banded_sliding_windows = staticmethod(
         region_query.banded_sliding_window_histograms

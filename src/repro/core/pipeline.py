@@ -58,8 +58,10 @@ def auto_batch_size(num_bins: int, h: int, w: int) -> int:
     """Frames per dispatch from the per-frame (num_bins, h, w) fp32 H
     footprint: ROI-scale frames are dispatch-bound and batch deep, full
     frames are cache-bound and stay near 1 (the adaptive-batching idea of
-    Koppaka et al., arXiv:1011.0235, restated for XLA dispatch).  Shared
-    by ``IntegralHistogram.map_frames`` and ``FragmentTracker.track``."""
+    Koppaka et al., arXiv:1011.0235, restated for XLA dispatch).  The
+    planner (core/engine.py) owns the microbatch decision and calls this;
+    ``IntegralHistogram.map_frames`` asks the planner, while
+    ``FragmentTracker.track`` still sizes its scan chunks here directly."""
     per_frame_bytes = 4 * num_bins * h * w
     return max(1, min(16, _AUTO_BATCH_BYTES // per_frame_bytes))
 

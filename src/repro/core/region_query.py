@@ -29,20 +29,32 @@ shared across the frame axis; for per-frame rects, vmap
     ``region_histogram``); kept as the oracle for the slice path and for
     benchmarking the difference (benchmarks/bench_analytics.py).
 
-The ``banded_*`` variants run the same queries over a band stream
-(core/bands.py) instead of a materialized H: Eq. 2 only ever reads corner
-*rows*, so a rect touches at most 2 bands and a sliding-window field
-touches two strided row lattices — frames whose full (b, h, w) H exceeds
-memory (paper §4.6: 32 GB at 64 MB x 128 bins) still get exact O(1)
-queries and likelihood maps.
+Every entry point also accepts an ``HSource`` (core/hsource.py) instead
+of a raw array: the dense, banded, spilled, and sharded representations
+all answer the same queries through one corner-row protocol — Eq. 2 only
+ever reads corner *rows*, so a rect touches at most 2 bands and a
+sliding-window field touches two strided row lattices.  Frames whose
+full (b, h, w) H exceeds memory (paper §4.6: 32 GB at 64 MB x 128 bins)
+still get exact O(1) queries and likelihood maps.
+
+The ``banded_*`` entry points are deprecated shims over that dispatch
+(``BandedH`` + the unified functions); see ``HistogramEngine``
+(core/engine.py) for the planned successor to hand-routing any of this.
 """
 
 from __future__ import annotations
 
-import itertools
+import warnings
 
 import jax.numpy as jnp
 import numpy as np
+
+
+def _maybe_hsource(H):
+    """Return H as an HSource when it is one, else None (raw array path)."""
+    from repro.core import hsource  # deferred: hsource imports this module
+
+    return H if isinstance(H, hsource.HSource) else None
 
 
 def _corner(H: jnp.ndarray, r: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
@@ -74,6 +86,9 @@ def region_histogram(H: jnp.ndarray, rects: jnp.ndarray) -> jnp.ndarray:
     Returns:
       (*H_lead, *rects_lead, b) region histograms.
     """
+    src = _maybe_hsource(H)
+    if src is not None:
+        return src.region_histogram(rects)
     r0, c0, r1, c1 = (rects[..., i] for i in range(4))
     return (
         _corner(H, r1, c1)
@@ -149,6 +164,7 @@ def sliding_window_histograms(
     stride: int = 1,
     *,
     impl: str = "slice",
+    stats: dict | None = None,
 ) -> jnp.ndarray:
     """Histograms of every (wh, ww) window at the given stride.
 
@@ -156,9 +172,19 @@ def sliding_window_histograms(
     and frame; this is the constant-time multi-scale exhaustive search of
     the paper.  ``impl`` selects the strided-slice path (default) or the
     explicit per-window gather (see module docstring); both are bit-exact.
+    An ``HSource`` H routes through the corner-row protocol (``impl`` is
+    moot there; ``stats`` receives the peak-memory proxy).
     """
     if impl not in ("slice", "gather"):
         raise ValueError(f"unknown impl {impl!r} (want 'slice' or 'gather')")
+    src = _maybe_hsource(H)
+    if src is not None:
+        return src.sliding_window_histograms(window, stride, stats=stats)
+    if stats is not None:
+        # Dense-array semantics: the whole H is the one live "band".
+        nbytes = 4 * int(np.prod(H.shape, dtype=np.int64))
+        stats.update(num_bands=1, band_bytes=nbytes, slab_bytes=0,
+                     peak_bytes=nbytes, full_h_bytes=nbytes)
     h, w = H.shape[-2:]
     n_r = (h - window[0]) // stride + 1
     n_c = (w - window[1]) // stride + 1
@@ -173,19 +199,49 @@ def sliding_window_histograms(
 
 
 def likelihood_map(H: jnp.ndarray, target_hist: jnp.ndarray,
-                   window: tuple[int, int], metric, stride: int = 1):
+                   window: tuple[int, int], metric, stride: int = 1,
+                   *, stats: dict | None = None):
     """Feature likelihood map (abstract, ¶1): per-position similarity of the
     window histogram to the target histogram.
 
     ``target_hist`` is (b,) — one target for all frames — or carries the
     same leading frame axes as H (e.g. (n, b) against an (n, b, h, w)
     stack: one target per frame, broadcast over window positions).
-    Returns (..., n_rows, n_cols).
+    Returns (..., n_rows, n_cols).  H may be any ``HSource``.
     """
-    hists = sliding_window_histograms(H, window, stride)
+    src = _maybe_hsource(H)
+    if src is not None:
+        return src.likelihood_map(target_hist, window, metric, stride,
+                                  stats=stats)
+    hists = sliding_window_histograms(H, window, stride, stats=stats)
     if target_hist.ndim > 1:
         target_hist = target_hist[..., None, None, :]
     return metric(hists, target_hist)
+
+
+def reduce_scale_maps(maps, windows, stride: int, lead: tuple):
+    """Per-frame argmax across a list of per-scale likelihood maps.
+
+    Shared by the dense ``multi_scale_search`` and the ``HSource`` generic
+    (core/hsource.py) so both reduce identically (bit-exact)."""
+    best_rect = jnp.zeros(lead + (4,), jnp.int32)
+    best_score = jnp.full(lead, -jnp.inf)
+    for (wh, ww), scores in zip(windows, maps):
+        if scores.shape[-2] == 0 or scores.shape[-1] == 0:
+            continue                # window exceeds the frame at this scale
+        flat = scores.reshape(lead + (-1,))
+        idx = jnp.argmax(flat, axis=-1)
+        score = jnp.take_along_axis(flat, idx[..., None], axis=-1)[..., 0]
+        n_cols = scores.shape[-1]
+        r0 = (idx // n_cols) * stride
+        c0 = (idx % n_cols) * stride
+        rect = jnp.stack(
+            [r0, c0, r0 + wh - 1, c0 + ww - 1], axis=-1
+        ).astype(jnp.int32)
+        better = score > best_score
+        best_rect = jnp.where(better[..., None], rect, best_rect)
+        best_score = jnp.maximum(score, best_score)
+    return best_rect, best_score
 
 
 def multi_scale_search(
@@ -201,28 +257,18 @@ def multi_scale_search(
     similarity (higher = better) from core/distances.py.  For an H stack
     (..., b, h, w) the rects are (..., 4) and scores (...,) — the argmax
     runs independently per frame, matching a per-frame loop bit-exactly.
+    An ``HSource`` H fetches the union of every scale's corner-row
+    lattices in one pass (one band stream serves all scales).
     """
+    src = _maybe_hsource(H)
+    if src is not None:
+        return src.multi_scale_search(target_hist, windows, metric, stride)
     lead = H.shape[:-3]
-    best_rect = jnp.zeros(lead + (4,), jnp.int32)
-    best_score = jnp.full(lead, -jnp.inf)
-    maps = []
-    for wh, ww in windows:
-        scores = likelihood_map(H, target_hist, (wh, ww), metric, stride)
-        maps.append(scores)
-        if scores.shape[-2] == 0 or scores.shape[-1] == 0:
-            continue                # window exceeds the frame at this scale
-        flat = scores.reshape(lead + (-1,))
-        idx = jnp.argmax(flat, axis=-1)
-        score = jnp.take_along_axis(flat, idx[..., None], axis=-1)[..., 0]
-        n_cols = scores.shape[-1]
-        r0 = (idx // n_cols) * stride
-        c0 = (idx % n_cols) * stride
-        rect = jnp.stack(
-            [r0, c0, r0 + wh - 1, c0 + ww - 1], axis=-1
-        ).astype(jnp.int32)
-        better = score > best_score
-        best_rect = jnp.where(better[..., None], rect, best_rect)
-        best_score = jnp.maximum(score, best_score)
+    maps = [
+        likelihood_map(H, target_hist, (wh, ww), metric, stride)
+        for wh, ww in windows
+    ]
+    best_rect, best_score = reduce_scale_maps(maps, windows, stride, lead)
     return best_rect, best_score, maps
 
 
@@ -266,24 +312,29 @@ def corner_rows(rects: np.ndarray) -> np.ndarray:
     return needed[needed >= 0].astype(np.int64)
 
 
+def _deprecated_banded(name: str, replacement: str):
+    warnings.warn(
+        f"{name} is deprecated: wrap the band stream in an HSource and use "
+        f"the unified entry point instead — {replacement} — or drive the "
+        "whole request through repro.core.engine.HistogramEngine",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
 def banded_region_histogram(bands, rects: jnp.ndarray) -> jnp.ndarray:
-    """``region_histogram`` over a band iterator.
+    """Deprecated shim: ``region_histogram(BandedH(bands), rects)``.
 
     Streams the bands once, keeping only the corner rows the rects touch
     (each rect's four corners live on two rows, hence in <= 2 bands);
     memory is O(distinct corner rows x b x w), never O(b x h x w).
     """
-    rects_np = np.asarray(rects)
-    needed = corner_rows(rects_np)
-    chunks = []
-    for band in bands:
-        sel = (needed >= band.r0) & (needed < band.r1)
-        if sel.any():
-            chunks.append(np.asarray(band.H[..., needed[sel] - band.r0, :]))
-    Hc = np.concatenate(chunks, axis=-2)
-    return compressed_region_histogram(
-        jnp.asarray(Hc), jnp.asarray(needed), jnp.asarray(rects_np)
+    from repro.core.hsource import as_hsource
+
+    _deprecated_banded(
+        "banded_region_histogram", "region_histogram(BandedH(bands), rects)"
     )
+    return region_histogram(as_hsource(bands), rects)
 
 
 def banded_sliding_window_histograms(
@@ -293,80 +344,24 @@ def banded_sliding_window_histograms(
     *,
     stats: dict | None = None,
 ) -> jnp.ndarray:
-    """``sliding_window_histograms`` over a band iterator.
+    """Deprecated shim:
+    ``sliding_window_histograms(BandedH(bands), window, stride)``.
 
     On the regular window grid all four Eq.-2 corners live on two strided
-    row lattices — bottom rows ``wh-1 + i*s`` and top rows ``i*s - 1`` —
-    so each band contributes a few rows to two (..., b, n_rows, w) slabs
-    and is then dropped.  The column arithmetic afterwards is the same
-    strided-slice trick as the monolithic path.  Peak memory is one band
-    plus the two slabs (``stats`` receives the proxy; see
-    benchmarks/bench_bands.py), never the full H.
-
-    The slabs hold n_rows = (h - wh) // stride + 1 rows each, so the
-    memory win over monolithic H scales with the stride: at stride 1 the
-    slabs (and the query field itself, which is ~ b*h*w values) match the
-    full H footprint and banding cannot help — a UserWarning says so
-    rather than silently over-allocating the budget the caller set.
+    row lattices, so the stream is consumed in one pass into corner-row
+    slabs; peak memory is one band plus the slabs (``stats`` receives the
+    proxy), never the full H.  At stride 1 the slabs match the full-H
+    footprint and a UserWarning says banding cannot help.
     """
-    import warnings
+    from repro.core.hsource import as_hsource
 
-    bands = iter(bands)
-    first = next(bands)
-    h, w = first.frame_h, first.H.shape[-1]
-    wh, ww = window
-    s = stride
-    n_r = (h - wh) // s + 1
-    n_c = (w - ww) // s + 1
-    lead = first.H.shape[:-3]
-    b = first.H.shape[-3]
-    if n_r <= 0 or n_c <= 0:
-        return jnp.zeros(lead + (max(n_r, 0), max(n_c, 0), b), jnp.float32)
-
-    nlead = int(np.prod(lead, dtype=np.int64) or 1)
-    slab_bytes = 2 * 4 * nlead * b * n_r * w
-    full_bytes = 4 * nlead * b * h * w
-    if slab_bytes >= full_bytes:
-        warnings.warn(
-            f"banded sliding windows at stride {s} need {slab_bytes} B of "
-            f"corner-row slabs >= the {full_bytes} B monolithic H they "
-            "avoid; increase the stride (slabs scale with 1/stride) or "
-            "use the monolithic path for frames this size",
-            stacklevel=2,
-        )
-    bot = np.zeros(lead + (b, n_r, w), np.float32)
-    top = np.zeros(lead + (b, n_r, w), np.float32)
-    peak_band = 0
-    for band in itertools.chain([first], bands):
-        Hb = np.asarray(band.H)
-        peak_band = max(peak_band, Hb.nbytes)
-        # bottom lattice: global rows wh-1 + i*s inside [r0, r1)
-        i_lo = max(0, -(-(band.r0 - (wh - 1)) // s))
-        i_hi = min(n_r - 1, (band.r1 - 1 - (wh - 1)) // s)
-        if i_hi >= i_lo:
-            ii = np.arange(i_lo, i_hi + 1)
-            bot[..., ii, :] = Hb[..., wh - 1 + ii * s - band.r0, :]
-        # top lattice: global rows i*s - 1, i >= 1 (i = 0 is the zero row)
-        i_lo = max(1, -(-(band.r0 + 1) // s))
-        i_hi = min(n_r - 1, band.r1 // s)
-        if i_hi >= i_lo:
-            ii = np.arange(i_lo, i_hi + 1)
-            top[..., ii, :] = Hb[..., ii * s - 1 - band.r0, :]
-
-    diff = bot - top                                   # (..., b, n_r, w)
-    d = diff[..., ww - 1 :: s][..., :n_c]
-    c = np.zeros_like(d)                               # virtual zero column
-    c[..., 1:] = diff[..., s - 1 :: s][..., : n_c - 1]
-    if stats is not None:
-        stats.update(
-            num_bands=first.num_bands,
-            band_bytes=peak_band,
-            slab_bytes=bot.nbytes + top.nbytes,
-            peak_bytes=peak_band + bot.nbytes + top.nbytes,
-            full_h_bytes=4 * int(np.prod(lead, dtype=np.int64) or 1)
-            * b * h * w,
-        )
-    return jnp.asarray(np.moveaxis(d - c, -3, -1))     # (..., n_r, n_c, b)
+    _deprecated_banded(
+        "banded_sliding_window_histograms",
+        "sliding_window_histograms(BandedH(bands), window, stride)",
+    )
+    return sliding_window_histograms(
+        as_hsource(bands), window, stride, stats=stats
+    )
 
 
 def banded_likelihood_map(
@@ -378,11 +373,14 @@ def banded_likelihood_map(
     *,
     stats: dict | None = None,
 ):
-    """``likelihood_map`` over a band stream: exact per-position similarity
-    for frames whose full H exceeds memory."""
-    hists = banded_sliding_window_histograms(
-        bands, window, stride, stats=stats
+    """Deprecated shim:
+    ``likelihood_map(BandedH(bands), target, window, metric, stride)``."""
+    from repro.core.hsource import as_hsource
+
+    _deprecated_banded(
+        "banded_likelihood_map",
+        "likelihood_map(BandedH(bands), target, window, metric)",
     )
-    if target_hist.ndim > 1:
-        target_hist = target_hist[..., None, None, :]
-    return metric(hists, target_hist)
+    return likelihood_map(
+        as_hsource(bands), target_hist, window, metric, stride, stats=stats
+    )

@@ -80,13 +80,25 @@ class FragmentTracker:
 
     State is a dict {"bbox", "ref_hists", "frag_offsets"}; every field
     grows a leading target axis when ``init`` is given ``(t, 4)`` bboxes.
+
+    ``engine`` (a ``HistogramEngine``, core/engine.py) optionally supplies
+    the H computation so the tracker shares one planned configuration
+    with the rest of a pipeline; its bin count must match the config's.
     """
 
-    def __init__(self, config: TrackerConfig = TrackerConfig()):
+    def __init__(self, config: TrackerConfig = TrackerConfig(), engine=None):
         self.config = config
+        if engine is not None and engine.num_bins != config.num_bins:
+            raise ValueError(
+                f"engine num_bins {engine.num_bins} != tracker "
+                f"num_bins {config.num_bins}"
+            )
+        self._engine = engine
 
     # -- H computation (shared by init/step/track) --------------------------
     def _compute_h(self, frames: jnp.ndarray) -> jnp.ndarray:
+        if self._engine is not None:
+            return self._engine.compute_dense(frames)
         cfg = self.config
         return integral_histogram(
             frames, cfg.num_bins, method=cfg.method, backend=cfg.backend
@@ -118,11 +130,21 @@ class FragmentTracker:
         """Advance one frame (computes this frame's H, then votes)."""
         return self.step_on_h(state, self._compute_h(frame))
 
+    def step_on_h(self, state: dict, H) -> dict:
+        """Advance one frame given its precomputed H — the hook for
+        pipelines that already stream integral histograms
+        (``IntegralHistogram.map_frames`` / ``HistogramEngine``).  ``H``
+        is a (b, h, w) array or any ``HSource`` (densified: the vote's
+        candidate rects are traced, so corner-row compression does not
+        apply)."""
+        from repro.core.hsource import HSource
+
+        if isinstance(H, HSource):
+            H = H.dense()
+        return self._step_on_h_jit(state, H)
+
     @functools.partial(jax.jit, static_argnums=(0,))
-    def step_on_h(self, state: dict, H: jnp.ndarray) -> dict:
-        """Advance one frame given its precomputed (b, h, w) H — the hook
-        for pipelines that already stream integral histograms
-        (``IntegralHistogram.map_frames``)."""
+    def _step_on_h_jit(self, state: dict, H: jnp.ndarray) -> dict:
         return self._step_state(state, H)
 
     def track(self, state: dict, frames, *, batch_size: int | str = "auto"):

@@ -161,18 +161,22 @@ def integral_histogram(
             )
 
     if memory_budget_bytes is not None:
-        from repro.core import bands  # deferred: bands imports this module
+        # The banding decision lives in the planner (core/engine.py) —
+        # this entry point just executes whatever plan it hands back.
+        from repro.core import bands, engine  # deferred: both import us
 
         h, w = image.shape[-2:]
         num_frames = 1 if image.ndim == 2 else image.shape[0]
-        plan = bands.plan_bands(
-            h, w, num_bins,
-            memory_budget_bytes=memory_budget_bytes, num_frames=num_frames,
-        )
-        if len(plan.spans) > 1:
+        p = engine.plan(engine.WorkloadSpec(
+            height=h, width=w, num_bins=num_bins, num_frames=num_frames,
+            method=method, backend=backend, tile=tile, bin_block=bin_block,
+            use_mxu=use_mxu, interpret=interpret, value_range=value_range,
+            memory_budget_bytes=memory_budget_bytes,
+        ))
+        if p.band_plan is not None:
             return bands.banded_integral_histogram(
-                image, num_bins, plan=plan, carry_in=carry_in,
-                method=method, backend=backend, tile=tile,
+                image, num_bins, plan=p.band_plan, carry_in=carry_in,
+                method=method, backend=p.backend, tile=tile,
                 bin_block=bin_block, use_mxu=use_mxu, interpret=interpret,
                 value_range=value_range,
             )

@@ -29,6 +29,17 @@ def fake_bench(monkeypatch):
     return mod
 
 
+def test_list_prints_names_and_exits_zero(capsys):
+    """--list prints every registered bench with its description and
+    returns normally (exit 0) without importing or running any bench."""
+    bench_run.main(["--list"])                # no SystemExit: exit code 0
+    out = capsys.readouterr().out
+    for name, _, desc in bench_run.BENCHES:
+        assert name in out and desc in out
+    assert "engine" in out                    # the plan/execute bench rides
+    assert "all benches complete" not in out  # nothing actually ran
+
+
 def test_only_unknown_name_fails(capsys):
     with pytest.raises(SystemExit) as e:
         bench_run.main(["--only", "nope"])

@@ -83,6 +83,92 @@ def test_distributed_integral_histograms():
     assert "dist-IH OK" in out
 
 
+def test_engine_sharded_parity_and_host_assembly():
+    """The plan/execute engine on an 8-device mesh: bin- and
+    spatial-sharded plans are bit-exact vs the monolithic oracle, and the
+    banded+row-sharded band assembly goes through host-side np — NEVER
+    ``jnp.concatenate`` over row-sharded bands, which silently
+    mis-assembles on jax 0.4.37 (CHANGES.md, PR 3).  The guard patches
+    ``jnp.concatenate`` to reject any multi-device-sharded operand, so a
+    regression to device-side assembly fails loudly on every jax."""
+    out = _run("""
+        import warnings; warnings.filterwarnings("ignore")
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.engine import HistogramEngine, RegionQuery, \\
+            SlidingWindowQuery
+        from repro.core.hsource import BandedH
+        from repro.kernels.ops import integral_histogram
+
+        img = np.random.default_rng(5).integers(
+            0, 256, (64, 128), dtype=np.uint8)
+        ref = np.asarray(integral_histogram(jnp.asarray(img), 16,
+                                            backend="jnp"))
+        rects = np.array([[0, 0, 63, 127], [3, 4, 30, 40]])
+        from repro.core.region_query import (region_histogram,
+                                             sliding_window_histograms)
+        want_r = np.asarray(region_histogram(jnp.asarray(ref), rects))
+        want_w = np.asarray(sliding_window_histograms(
+            jnp.asarray(ref), (16, 24), 8))
+
+        # regression guard: any jnp.concatenate over a multi-device-sharded
+        # operand (the 0.4.37 row-sharded band hazard) fails the test
+        real_concat = jnp.concatenate
+        def guarded(arrays, *a, **k):
+            for x in arrays:
+                if isinstance(x, jax.Array) and hasattr(x, "sharding") \\
+                        and len(x.sharding.device_set) > 1:
+                    raise AssertionError(
+                        "jnp.concatenate over a sharded band: assembly "
+                        "must be host-side (np), see CHANGES.md PR 3")
+            return real_concat(arrays, *a, **k)
+        jnp.concatenate = guarded
+
+        # bin-sharded plan (2x4 mesh, bins divide the model axis)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        eng = HistogramEngine(16, backend="jnp", mesh=mesh)
+        out = eng.run(img, [RegionQuery(rects),
+                            SlidingWindowQuery((16, 24), 8)])
+        assert out.plan.representation == "sharded"
+        assert out.plan.sharding == "bin"
+        assert np.array_equal(np.asarray(out.results[0]), want_r)
+        assert np.array_equal(np.asarray(out.results[1]), want_w)
+
+        # spatial (row-strip) plan, forced explicitly
+        eng_sp = HistogramEngine(16, backend="jnp", mesh=mesh,
+                                 sharding="spatial")
+        out_sp = eng_sp.run(img, [RegionQuery(rects)])
+        assert out_sp.plan.sharding == "spatial"
+        assert np.array_equal(np.asarray(out_sp.results[0]), want_r)
+        assert np.array_equal(np.asarray(out_sp.source.dense()), ref)
+
+        # banded + row-sharded: bands stream through the mesh, assembly
+        # and corner-row slabs are host-side (the guard is live here)
+        budget = 4 * 16 * 128 * 16                # 16-row bands
+        eng_b = HistogramEngine(16, backend="jnp", mesh=mesh,
+                                sharding="spatial",
+                                memory_budget_bytes=budget)
+        out_b = eng_b.run(img, [RegionQuery(rects),
+                                SlidingWindowQuery((16, 24), 8)])
+        assert out_b.plan.band_plan is not None
+        assert out_b.plan.band_plan.num_bands >= 4
+        assert isinstance(out_b.source, BandedH)
+        assert np.array_equal(np.asarray(out_b.results[0]), want_r)
+        assert np.array_equal(np.asarray(out_b.results[1]), want_w)
+        rows = out_b.source.rows(np.array([0, 15, 16, 63]))
+        assert type(rows) is np.ndarray          # host-side by construction
+        assert np.array_equal(rows, ref[:, [0, 15, 16, 63], :])
+        # banded + bin-sharded through the same engine path
+        eng_bb = HistogramEngine(16, backend="jnp", mesh=mesh,
+                                 memory_budget_bytes=budget)
+        out_bb = eng_bb.run(img, [RegionQuery(rects)])
+        assert out_bb.plan.sharding == "bin"
+        assert out_bb.plan.band_plan is not None
+        assert np.array_equal(np.asarray(out_bb.results[0]), want_r)
+        print("engine-sharded OK")
+    """)
+    assert "engine-sharded OK" in out
+
+
 def test_expert_parallel_moe_matches_local():
     out = _run("""
         import warnings; warnings.filterwarnings("ignore")
