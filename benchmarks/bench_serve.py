@@ -1,0 +1,109 @@
+"""Serving throughput: `AnalyticsService` requests/sec under query traffic.
+
+Closed-loop load against a synthetic frame store with a skewed (hot-set)
+frame popularity — the video-analytics serving shape: many queries land
+on few recent frames.  Two sweeps:
+
+  * in-flight depth — how many submits are outstanding before the caller
+    blocks on a future (1 = fully synchronous request/response); the
+    worker drains whatever accumulated, so depth is also the coalescing
+    opportunity;
+  * HSource cache on vs off — repeated queries on a hot frame skip the H
+    computation entirely on a hit.
+
+Reported: requests/sec, cache hit rate, coalesced share, engine runs per
+request, p95 latency.
+"""
+
+from __future__ import annotations
+
+import collections
+import time
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import fmt_table
+from repro.core import distances
+from repro.core.engine import HistogramEngine, LikelihoodQuery, RegionQuery
+from repro.data import video_frames
+from repro.serve import AnalyticsService
+
+
+def _requests(num_requests: int, num_frames: int, hot: int, seed: int):
+    """(frame_ref, query) load: 80% of traffic on the `hot` newest frames."""
+    rng = np.random.default_rng(seed)
+    target = np.ones(16, np.float32)
+    reqs = []
+    for i in range(num_requests):
+        if rng.random() < 0.8:
+            ref = int(num_frames - 1 - rng.integers(0, hot))
+        else:
+            ref = int(rng.integers(0, num_frames))
+        if i % 3 == 2:
+            q = LikelihoodQuery(target, (24, 24), distances.intersection,
+                                stride=8)
+        else:
+            r0, c0 = int(rng.integers(0, 40)), int(rng.integers(0, 40))
+            q = RegionQuery(np.array([r0, c0, r0 + 23, c0 + 23]))
+        reqs.append((ref, q))
+    return reqs
+
+
+def _drive(svc: AnalyticsService, reqs, depth: int) -> float:
+    """Closed loop with `depth` submits outstanding; returns seconds."""
+    t0 = time.perf_counter()
+    inflight: collections.deque = collections.deque()
+    with svc:
+        for ref, q in reqs:
+            inflight.append(svc.submit(ref, q, block=True))
+            if len(inflight) >= depth:
+                inflight.popleft().result()
+        while inflight:
+            inflight.popleft().result()
+    return time.perf_counter() - t0
+
+
+def run(quick: bool = False) -> str:
+    n_req = 60 if (quick or common.SMOKE) else 400
+    n_frames, hot = (8, 2) if (quick or common.SMOKE) else (32, 4)
+    h, w, bins = (96, 128, 16) if (quick or common.SMOKE) else (240, 320, 16)
+    store = {i: f for i, f in enumerate(video_frames(h, w, n_frames, seed=7))}
+
+    rows = []
+    for depth in (1, 4, 16):
+        for cache in (0, 8):
+            reqs = _requests(n_req, n_frames, hot, seed=depth)
+            svc = AnalyticsService(
+                HistogramEngine(bins, backend="jnp"), store,
+                cache_size=cache, max_pending=max(depth * 2, 4),
+            )
+            # warm the XLA compile cache, then start the measurement
+            # cold: clear the HSource cache so hit rates are earned by
+            # the measured traffic, not the warm-up
+            svc.process(reqs[:2])
+            svc.clear_cache()
+            svc.stats = type(svc.stats)()
+            dt = _drive(svc, reqs, depth)
+            common.TIMINGS.append({
+                "median_s": dt, "min_s": dt, "iters": 1,
+                "label": f"serve_depth{depth}_cache{cache}",
+            })
+            s = svc.stats.snapshot()
+            rows.append([
+                depth, "on" if cache else "off",
+                f"{n_req / dt:.1f}",
+                f"{100 * s['cache_hit_rate']:.0f}%",
+                f"{100 * s['coalesced'] / max(s['requests'], 1):.0f}%",
+                f"{s['engine_runs'] / max(s['requests'], 1):.2f}",
+                f"{1e3 * s['latency_p95_s']:.1f}",
+            ])
+    return fmt_table(
+        ["depth", "cache", "req/s", "hit rate", "coalesced",
+         "runs/req", "p95 ms"],
+        rows,
+    )
+
+
+if __name__ == "__main__":
+    print(run())

@@ -36,6 +36,9 @@ BENCHES = [
      "memory budget"),
     ("engine", "benchmarks.bench_engine",
      "ISSUE 4 — plan/execute engine overhead vs hand-routed calls"),
+    ("serve", "benchmarks.bench_serve",
+     "ISSUE 5 — AnalyticsService requests/sec vs in-flight depth and "
+     "cache"),
     ("multidevice", "benchmarks.bench_multidevice",
      "paper Fig. 16/17 — multi-device bin/spatial sharding"),
     ("speedup", "benchmarks.bench_speedup",

@@ -1,0 +1,111 @@
+"""Compare two BENCH_<sha>.json perf-trajectory records.
+
+CI (bench-smoke on main) keeps the previous run's record in the actions
+cache; this script diffs the new record against it and emits a markdown
+table for $GITHUB_STEP_SUMMARY — the per-commit perf trajectory made
+visible instead of rotting as unread artifacts.
+
+    python scripts/bench_compare.py OLD.json NEW.json [--threshold 1.5]
+                                    [--output summary.md]
+
+Exit code is always 0 on a successful comparison (smoke timings are
+single-iteration and noisy — the table *surfaces* regressions, marking
+anything slower than ``threshold``x with a warning row; gating merges on
+smoke noise would only train people to ignore CI).  Exit 2 on unreadable
+input.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _records(payload: dict) -> dict:
+    """bench -> list of (label, median_s), labels defaulted by position."""
+    out = {}
+    for bench, recs in payload.get("benches", {}).items():
+        out[bench] = [
+            (r.get("label") or f"#{i}", float(r["median_s"]))
+            for i, r in enumerate(recs)
+        ]
+    return out
+
+
+def compare(old: dict, new: dict, threshold: float = 1.5) -> tuple[str, int]:
+    """Markdown table of per-record deltas; returns (table, regressions).
+
+    Records are matched by (bench, label).  A record slower than
+    ``threshold``x its predecessor counts as a regression and its row is
+    flagged; benches that appeared/disappeared are listed but never
+    flagged (renames are not regressions).
+    """
+    old_r, new_r = _records(old), _records(new)
+    lines = [
+        "| bench | record | prev (s) | now (s) | ratio | |",
+        "|---|---|---|---|---|---|",
+    ]
+    regressions = 0
+    for bench in sorted(set(old_r) | set(new_r)):
+        if bench not in new_r:
+            lines.append(f"| {bench} | *(removed)* | | | | |")
+            continue
+        if bench not in old_r:
+            for label, t in new_r[bench]:
+                lines.append(f"| {bench} | {label} | — | {t:.4f} | new | |")
+            continue
+        prev = dict(old_r[bench])
+        for label, t in new_r[bench]:
+            p = prev.get(label)
+            if p is None:
+                lines.append(f"| {bench} | {label} | — | {t:.4f} | new | |")
+                continue
+            ratio = t / p if p > 0 else float("inf")
+            flag = ""
+            if ratio >= threshold:
+                flag = f"⚠️ ≥ {threshold:g}x slower"
+                regressions += 1
+            lines.append(
+                f"| {bench} | {label} | {p:.4f} | {t:.4f} | "
+                f"{ratio:.2f}x | {flag} |"
+            )
+    failures = new.get("failures") or []
+    if failures:
+        lines.append("")
+        lines.append(f"**failed benches:** {', '.join(failures)}")
+    header = (
+        f"### Bench trajectory ({'smoke' if new.get('smoke') else 'full'} "
+        f"timings, {regressions} record(s) ≥ {threshold:g}x slower)\n\n"
+    )
+    return header + "\n".join(lines), regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("old")
+    ap.add_argument("new")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="ratio that flags a record as a regression")
+    ap.add_argument("--output", default=None,
+                    help="write the markdown here (default: stdout)")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.old) as f:
+            old = json.load(f)
+        with open(args.new) as f:
+            new = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_compare: cannot read records: {e}", file=sys.stderr)
+        return 2
+    table, _ = compare(old, new, threshold=args.threshold)
+    if args.output:
+        with open(args.output, "w") as f:
+            f.write(table + "\n")
+    else:
+        print(table)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -197,10 +197,16 @@ def iter_banded_ih(
 
     ``compute_fn(band_image, carry_in) -> H_band`` overrides the kernel
     call — core/distributed.py uses this to run every band bin- or
-    spatially-sharded with the same carry chain.  ``prefetch >= 1`` stages
-    the next band's image slice on device while the current band computes
-    (core/pipeline.py's band-aware prefetch).
+    spatially-sharded with the same carry chain.  ``prefetch >= 1`` keeps
+    that many band image slices staged on device ahead of the one
+    computing (the §4.4 overlap applied inside one large frame).
+
+    The loop itself is ``runtime.FrameRuntime`` with the (b, w)
+    bottom-row carry threaded between dispatches; this function only
+    shapes each retired dispatch into a ``BandH``.
     """
+    from repro.core.runtime import FrameRuntime
+
     h, w = image.shape[-2:]
     num_frames = int(np.prod(image.shape[:-2], dtype=np.int64)) or 1
     if plan is None:
@@ -218,22 +224,25 @@ def iter_banded_ih(
                 carry_in=carry,
             )
 
-    if prefetch >= 1:
-        from repro.core.pipeline import prefetch_row_bands
-
-        slices: Iterable = prefetch_row_bands(
-            image, plan.spans, size=prefetch, device=device
-        )
-    else:
-        slices = (image[..., r0:r1, :] for r0, r1 in plan.spans)
-
-    carry = carry_in
-    for i, ((r0, r1), band_img) in enumerate(zip(plan.spans, slices)):
+    def step(band_img, carry):
         H_band = compute_fn(band_img, carry)
-        carry = H_band[..., -1, :]
+        return H_band, H_band[..., -1, :]
+
+    # Stage band slices only when prefetch is requested: device_put pins
+    # to ONE device, and a sharded compute_fn (iter_banded_sharded_ih)
+    # must receive uncommitted slices its shard_map can lay out itself.
+    runtime = FrameRuntime(
+        step, depth=1, carry_in=carry_in, device=device,
+        stage_inputs=prefetch >= 1, stage_ahead=max(prefetch, 0),
+        block=False,
+    )
+    slices: Iterable = (image[..., r0:r1, :] for r0, r1 in plan.spans)
+    for d in runtime.run(slices, batched=False,
+                         meta=lambda i, c, ch: plan.spans[i]):
+        r0, r1 = d.meta
         yield BandH(
-            index=i, num_bands=plan.num_bands, r0=r0, r1=r1, frame_h=h,
-            H=H_band, carry=carry,
+            index=d.index, num_bands=plan.num_bands, r0=r0, r1=r1,
+            frame_h=h, H=d.out, carry=d.carry,
         )
 
 

@@ -15,8 +15,9 @@ resource mappings (§4's four kernel mappings, §4.4 double-buffering,
 ``plan`` absorbs the decisions previously buried in call sites:
 
   * method/backend/tile resolution (``integral_histogram``'s "auto");
-  * microbatch sizing (``pipeline.auto_batch_size`` — arXiv:1011.0235's
-    adaptive batching);
+  * microbatch sizing (``auto_batch_size``, which now lives here —
+    arXiv:1011.0235's adaptive batching; ``adaptive_microbatch=True``
+    additionally lets the runtime retune the size online);
   * band planning + storage policy under ``memory_budget_bytes``
     (``bands.plan_bands`` — the auto-banding that lived inside
     ``integral_histogram``), following Ehsan et al.'s memory-efficient
@@ -51,9 +52,25 @@ from repro.core.hsource import (
     PrefetchedRowsH,
     ShardedH,
 )
-from repro.core.pipeline import auto_batch_size
 
 REPRESENTATIONS = ("dense", "banded", "spilled", "sharded")
+
+# "auto" microbatching targets this per-dispatch output footprint — roughly
+# an LLC's worth, the crossover between dispatch-bound and cache-bound
+# regimes measured in benchmarks/bench_batched.py.
+_AUTO_BATCH_BYTES = 4 << 20
+
+
+def auto_batch_size(num_bins: int, h: int, w: int) -> int:
+    """Frames per dispatch from the per-frame (num_bins, h, w) fp32 H
+    footprint: ROI-scale frames are dispatch-bound and batch deep, full
+    frames are cache-bound and stay near 1 (the adaptive-batching idea of
+    Koppaka et al., arXiv:1011.0235, restated for XLA dispatch).  The
+    planner owns this decision — it seeds every plan's ``microbatch``,
+    and ``adaptive_microbatch`` plans use it as the starting size the
+    runtime's online controller tunes from there."""
+    per_frame_bytes = 4 * num_bins * h * w
+    return max(1, min(16, _AUTO_BATCH_BYTES // per_frame_bytes))
 
 
 # ---------------------------------------------------------------------------
@@ -85,6 +102,7 @@ class WorkloadSpec:
     interpret: bool = False
     memory_budget_bytes: int | None = None
     storage: str | None = None
+    adaptive_microbatch: bool = False   # retune batch size online
     mesh: object | None = None          # jax.sharding.Mesh
     sharding: str = "auto"              # "auto" | "bin" | "spatial"
     bin_axis: str = "model"
@@ -118,6 +136,7 @@ class ExecutionPlan:
     band_plan: BandPlan | None
     storage: str | None
     sharding: str | None                # None | "bin" | "spatial"
+    microbatch_mode: str = "fixed"      # "fixed" | "adaptive"
 
     def explain(self) -> str:
         """Human-readable plan rationale (golden-snapshot tested)."""
@@ -134,7 +153,9 @@ class ExecutionPlan:
             f"  representation  : {self.representation}",
             f"  method/backend  : {self.method} / {self.backend}",
             f"  tile/bin_block  : {self.tile} / {self.bin_block}",
-            f"  microbatch      : {self.microbatch} frame(s)/dispatch",
+            f"  microbatch      : {self.microbatch} frame(s)/dispatch"
+            + (" (adaptive start)" if self.microbatch_mode == "adaptive"
+               else ""),
         ]
         if self.band_plan is None:
             budget = s.memory_budget_bytes
@@ -265,6 +286,8 @@ def plan(spec: WorkloadSpec) -> ExecutionPlan:
             backend=backend, tile=spec.tile, bin_block=spec.bin_block,
             microbatch=microbatch, band_plan=band_plan,
             storage=None, sharding=sharding,
+            microbatch_mode=(
+                "adaptive" if spec.adaptive_microbatch else "fixed"),
         )
 
     if spec.memory_budget_bytes is not None:
@@ -300,6 +323,8 @@ def plan(spec: WorkloadSpec) -> ExecutionPlan:
         backend=backend, tile=spec.tile, bin_block=spec.bin_block,
         microbatch=microbatch, band_plan=band_plan,
         storage=spec.storage, sharding=None,
+        microbatch_mode=("adaptive" if spec.adaptive_microbatch
+                         else "fixed"),
     )
 
 
@@ -457,6 +482,7 @@ class HistogramEngine:
         value_range: int = 256,
         memory_budget_bytes: int | None = None,
         storage: str | None = None,
+        adaptive_microbatch: bool = False,
         mesh=None,
         sharding: str = "auto",
         bin_axis: str = "model",
@@ -472,11 +498,13 @@ class HistogramEngine:
         self.value_range = value_range
         self.memory_budget_bytes = memory_budget_bytes
         self.storage = storage
+        self.adaptive_microbatch = adaptive_microbatch
         self.mesh = mesh
         self.sharding = sharding
         self.bin_axis = bin_axis
         self.row_axis = row_axis
         self.last_plan: ExecutionPlan | None = None
+        self.last_runtime = None        # FrameRuntime from map_frames
 
     # -- planning -----------------------------------------------------------
     def spec_for(
@@ -500,7 +528,9 @@ class HistogramEngine:
             bin_block=self.bin_block, use_mxu=self.use_mxu,
             interpret=self.interpret,
             memory_budget_bytes=self.memory_budget_bytes,
-            storage=self.storage, mesh=self.mesh, sharding=self.sharding,
+            storage=self.storage,
+            adaptive_microbatch=self.adaptive_microbatch,
+            mesh=self.mesh, sharding=self.sharding,
             bin_axis=self.bin_axis, row_axis=self.row_axis,
         )
 
@@ -594,15 +624,32 @@ class HistogramEngine:
         return EngineResult(plan=p, source=source, results=results)
 
     # -- streaming ----------------------------------------------------------
+    def runtime_for(self, p: ExecutionPlan, step=None, *, depth: int = 2,
+                    device=None, **kw):
+        """A ``FrameRuntime`` (core/runtime.py) configured from a plan:
+        microbatch size and fixed/adaptive mode come from the planner,
+        the in-flight window from the caller.  ``step`` defaults to the
+        engine's dense compute lifted to the runtime signature."""
+        from repro.core.runtime import FrameRuntime
+
+        if step is None:
+            step = FrameRuntime.stateless(self.compute_dense)
+        return FrameRuntime(
+            step, depth=depth, microbatch=p.microbatch,
+            adaptive=(p.microbatch_mode == "adaptive"),
+            device=device, **kw,
+        )
+
     def map_frames(
         self, frames: Iterable, *, depth: int = 2, device=None
     ) -> Iterator[jax.Array]:
         """Stream per-frame H's with planner-chosen microbatching and
         ``depth`` dispatches in flight (paper §4.4 double-buffering) —
-        the planner-driven successor of ``IntegralHistogram.map_frames``."""
+        the planner-driven successor of ``IntegralHistogram.map_frames``.
+        An ``adaptive_microbatch`` engine hands the runtime the plan's
+        size as a starting point and lets its online controller retune
+        it from measured per-dispatch latency."""
         import itertools
-
-        from repro.core.pipeline import DoubleBufferedExecutor
 
         frames = iter(frames)
         try:
@@ -623,8 +670,6 @@ class HistogramEngine:
                 f"{p.spec.width}x{p.spec.num_bins}; run each frame "
                 "through engine.run()/compute() instead"
             )
-        executor = DoubleBufferedExecutor(
-            self.compute_dense, depth=depth, device=device,
-            batch_size=p.microbatch,
-        )
-        return executor.map(itertools.chain([first], frames))
+        runtime = self.runtime_for(p, depth=depth, device=device)
+        self.last_runtime = runtime
+        return runtime.map_frames(itertools.chain([first], frames))

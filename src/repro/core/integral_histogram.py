@@ -75,30 +75,35 @@ class IntegralHistogram:
 
         Microbatches ``batch_size`` frames per dispatch through the batched
         kernel path and keeps ``depth`` dispatches in flight (paper §4.4's
-        dual-buffering), yielding one (num_bins, h, w) result per frame in
-        order.  This is the throughput path for video: see
-        benchmarks/bench_batched.py for the frames/sec scaling.
+        dual-buffering, via ``core/runtime.py``), yielding one
+        (num_bins, h, w) result per frame in order.  This is the
+        throughput path for video: see benchmarks/bench_batched.py for
+        the frames/sec scaling.
 
         ``batch_size="auto"`` asks the planner (core/engine.py) to size
         the microbatch from the per-frame output footprint (num_bins * h
         * w fp32): small ROI-scale frames are dispatch-bound and batch
         deep; full frames are cache-bound on CPU and stay near batch 1 —
         the adaptive-batching idea of Koppaka et al. (arXiv:1011.0235)
-        restated for XLA dispatch.
+        restated for XLA dispatch.  ``batch_size="adaptive"`` starts from
+        the planner's size and lets the runtime retune it online from
+        measured per-dispatch latency.
         """
         import itertools
 
-        from repro.core.pipeline import DoubleBufferedExecutor
+        from repro.core.runtime import FrameRuntime
 
         frames = iter(frames)
         try:
             first = next(frames)
         except StopIteration:
             return iter(())
+        adaptive = batch_size == "adaptive"
         if isinstance(batch_size, str):
-            if batch_size != "auto":
+            if batch_size not in ("auto", "adaptive"):
                 raise ValueError(
-                    f'batch_size must be an int or "auto", got {batch_size!r}'
+                    f'batch_size must be an int, "auto" or "adaptive", '
+                    f"got {batch_size!r}"
                 )
             from repro.core import engine as _engine
 
@@ -108,10 +113,11 @@ class IntegralHistogram:
                 num_frames=None, method=self.method, backend=self.backend,
             )).microbatch
 
-        executor = DoubleBufferedExecutor(
-            self, depth=depth, device=device, batch_size=batch_size
+        runtime = FrameRuntime(
+            FrameRuntime.stateless(self), depth=depth, device=device,
+            microbatch=batch_size, adaptive=adaptive,
         )
-        return executor.map(itertools.chain([first], frames))
+        return runtime.map_frames(itertools.chain([first], frames))
 
     def map_bands(
         self,

@@ -2,72 +2,51 @@
 
 The paper overlaps (disk -> host), (host -> device), kernel execution and
 (device -> host) across a frame sequence using two CUDA streams with
-page-locked memory.  The JAX/TPU equivalent:
+page-locked memory.  The JAX/TPU equivalent lives in ``core/runtime.py``
+(one async scheduler: bounded in-flight window, microbatching, carry
+threading, device prefetch); this module keeps the historical entry
+points as thin adapters over it:
 
-  * XLA dispatch is asynchronous: enqueueing a jitted computation returns
-    immediately; only blocking on results synchronizes.
-  * `DoubleBufferedExecutor` keeps `depth` dispatches in flight — it stages
-    the next chunk onto the device (device_put ~ cudaMemcpyAsync H2D) while
-    the kernel for the current chunk runs, and only blocks on the oldest
-    in-flight result (~ D2H of the previous integral histogram).
-  * depth=1 degenerates to fully synchronous execution — the "no
-    dual-buffering" baseline of Fig. 13.
-  * `batch_size` > 1 microbatches: frames are stacked on the host and
-    dispatched `batch_size` at a time through a single batched computation
-    (the rank-polymorphic `integral_histogram` accepts (n, h, w) stacks).
-    This amortizes per-dispatch overhead the same way Koppaka et al.'s
-    adaptive CUDA streams batch histogram work — on CPU/XLA it is where
-    most of the frames/sec headroom lives (benchmarks/bench_batched.py).
+  * ``DoubleBufferedExecutor`` — ``depth`` dispatches in flight,
+    ``batch_size`` frames stacked per dispatch.  depth=1 degenerates to
+    fully synchronous execution (the "no dual-buffering" baseline of
+    Fig. 13); on real TPUs the same code overlaps PCIe/DCN infeed with
+    TPU compute, on CPU it overlaps host staging with XLA:CPU's async
+    execution (benchmarks/bench_pipeline.py).
+  * ``prefetch_to_device`` / ``prefetch_row_bands`` — the H2D staging
+    half of the overlap, for consumers that drive their own compute.
 
-On real TPUs the same code overlaps PCIe/DCN infeed with TPU compute; on
-CPU it overlaps host staging with XLA:CPU's async execution, which is what
-benchmarks/bench_pipeline.py measures.
+Microbatch *sizing* lives in the planner (``core/engine.py``), which
+owns ``auto_batch_size``; it is re-exported here for compatibility.
 """
 
 from __future__ import annotations
 
-import collections
 from typing import Callable, Iterable, Iterator
 
 import jax
-import numpy as np
 
-# "auto" microbatching targets this per-dispatch output footprint — roughly
-# an LLC's worth, the crossover between dispatch-bound and cache-bound
-# regimes measured in benchmarks/bench_batched.py.
-_AUTO_BATCH_BYTES = 4 << 20
+from repro.core.runtime import FrameRuntime, stack_chunks, stage_stream
 
+# Re-exports: sizing moved into the planner (core/engine.py) with PR 5;
+# chunking moved into the runtime.  Import them from their new homes in
+# new code.
+from repro.core.engine import auto_batch_size  # noqa: F401
 
-def stack_chunks(
-    frames: Iterable[np.ndarray], batch_size: int
-) -> Iterator[np.ndarray]:
-    """Group a frame stream into stacked (<= batch_size, ...) host arrays
-    (ragged final chunk included).  Shared by the executor's microbatching
-    and ``FragmentTracker.track``."""
-    buf: list = []
-    for frame in frames:
-        buf.append(np.asarray(frame))
-        if len(buf) == batch_size:
-            yield np.stack(buf)
-            buf = []
-    if buf:
-        yield np.stack(buf)
-
-
-def auto_batch_size(num_bins: int, h: int, w: int) -> int:
-    """Frames per dispatch from the per-frame (num_bins, h, w) fp32 H
-    footprint: ROI-scale frames are dispatch-bound and batch deep, full
-    frames are cache-bound and stay near 1 (the adaptive-batching idea of
-    Koppaka et al., arXiv:1011.0235, restated for XLA dispatch).  The
-    planner (core/engine.py) owns the microbatch decision and calls this;
-    ``IntegralHistogram.map_frames`` asks the planner, while
-    ``FragmentTracker.track`` still sizes its scan chunks here directly."""
-    per_frame_bytes = 4 * num_bins * h * w
-    return max(1, min(16, _AUTO_BATCH_BYTES // per_frame_bytes))
+__all__ = [
+    "DoubleBufferedExecutor",
+    "auto_batch_size",
+    "stack_chunks",
+    "prefetch_to_device",
+    "iter_row_bands",
+    "prefetch_row_bands",
+]
 
 
 class DoubleBufferedExecutor:
     """Apply a jitted fn over a stream of host frames with dispatch-ahead.
+
+    A thin adapter over ``runtime.FrameRuntime`` (the §4.4 scheduler).
 
     Args:
       fn: jitted callable.  With ``batch_size > 1`` it must accept stacked
@@ -91,44 +70,25 @@ class DoubleBufferedExecutor:
         self.batch_size = batch_size
         self.device = device or jax.devices()[0]
 
-    # -- internals ---------------------------------------------------------
-    def _chunks(self, frames: Iterable[np.ndarray]) -> Iterator[np.ndarray]:
-        """Group the stream into (batch_size, ...) stacks (or raw frames)."""
-        if self.batch_size == 1:
-            yield from frames
-            return
-        yield from stack_chunks(frames, self.batch_size)
+    def _runtime(self) -> FrameRuntime:
+        return FrameRuntime(
+            FrameRuntime.stateless(self.fn),
+            depth=self.depth,
+            microbatch=self.batch_size,
+            device=self.device,
+        )
 
-    def _ready(self, out, is_batch: bool) -> Iterator[jax.Array]:
-        out = jax.block_until_ready(out)              # ~ D2H sync point
-        if is_batch:
-            # Per-frame views of an already-materialized device array —
-            # indexing is cheap; no extra host round-trips.
-            for i in range(out.shape[0]):
-                yield out[i]
-        else:
-            yield out
-
-    # -- public ------------------------------------------------------------
-    def map(self, frames: Iterable[np.ndarray]) -> Iterator[jax.Array]:
+    def map(self, frames: Iterable) -> Iterator[jax.Array]:
         """Yield fn(frame) per input frame, `depth` dispatches in flight.
 
         With ``batch_size > 1`` each dispatch covers ``batch_size`` frames,
         but the iterator still yields one result per frame, in order.
         """
-        is_batch = self.batch_size > 1
-        inflight: collections.deque = collections.deque()
-        for chunk in self._chunks(frames):
-            staged = jax.device_put(chunk, self.device)   # async H2D
-            inflight.append(self.fn(staged))              # async dispatch
-            if len(inflight) >= self.depth:
-                yield from self._ready(inflight.popleft(), is_batch)
-        while inflight:
-            yield from self._ready(inflight.popleft(), is_batch)
+        return self._runtime().map_frames(frames)
 
 
 def prefetch_to_device(
-    frames: Iterable[np.ndarray], size: int = 2, device=None
+    frames: Iterable, size: int = 2, device=None
 ) -> Iterator[jax.Array]:
     """Stage host arrays onto the device ahead of consumption (training
     input pipeline building block).  Exactly ``size`` frames are staged
@@ -136,16 +96,7 @@ def prefetch_to_device(
     beyond the one in the consumer's hands.  Device-memory commitment is
     bounded by ``size``; for ``k`` transfers overlapping the consumer's
     compute in steady state, pass ``size=k + 1``."""
-    device = device or jax.devices()[0]
-    queue: collections.deque = collections.deque()
-    for frame in frames:
-        queue.append(jax.device_put(frame, device))
-        # yield once exactly `size` frames are staged — `> size` would
-        # hold size + 1 frames on device before the first yield
-        if len(queue) >= size:
-            yield queue.popleft()
-    while queue:
-        yield queue.popleft()
+    return stage_stream(frames, size=size, device=device)
 
 
 def iter_row_bands(image, spans) -> Iterator:
@@ -161,4 +112,4 @@ def prefetch_row_bands(image, spans, size: int = 2, device=None) -> Iterator:
     idea applied inside one large frame instead of across a frame stream.
     Device commitment is bounded by ``size`` band slices (plus the one the
     consumer holds); the full frame never leaves the host."""
-    return prefetch_to_device(iter_row_bands(image, spans), size, device)
+    return stage_stream(iter_row_bands(image, spans), size=size, device=device)

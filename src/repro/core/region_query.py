@@ -314,9 +314,10 @@ def corner_rows(rects: np.ndarray) -> np.ndarray:
 
 def _deprecated_banded(name: str, replacement: str):
     warnings.warn(
-        f"{name} is deprecated: wrap the band stream in an HSource and use "
-        f"the unified entry point instead — {replacement} — or drive the "
-        "whole request through repro.core.engine.HistogramEngine",
+        f"{name} is deprecated and will be removed in 2.0: wrap the band "
+        f"stream in an HSource and use the unified entry point instead — "
+        f"{replacement} — or drive the whole request through "
+        "repro.core.engine.HistogramEngine",
         DeprecationWarning,
         stacklevel=3,
     )

@@ -27,7 +27,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import itertools
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +34,6 @@ import numpy as np
 from jax import lax
 
 from repro.core import distances
-from repro.core.pipeline import auto_batch_size, stack_chunks
 from repro.core.region_query import region_histogram
 from repro.kernels.ops import integral_histogram
 
@@ -154,15 +152,25 @@ class FragmentTracker:
           state: tracker state from ``init``.
           frames: (n, h, w) array or any iterable of (h, w) frames.
           batch_size: frames per batched H dispatch (the chunk that one
-            ``lax.scan`` consumes on-device).  ``"auto"`` sizes the chunk
-            from the per-frame H footprint, exactly like
-            ``IntegralHistogram.map_frames``.  A ragged final chunk costs
-            one extra compile, like ``DoubleBufferedExecutor``.
+            ``lax.scan`` consumes on-device).  ``"auto"`` asks the
+            planner (core/engine.py) to size the chunk from the
+            per-frame H footprint, exactly like
+            ``IntegralHistogram.map_frames``.  A ragged final chunk
+            costs one extra compile.
+
+        The clip loop is ``runtime.FrameRuntime`` with the tracker state
+        as the carry threaded between chunk dispatches (an array clip is
+        chunked by slicing — device arrays stay on device; an iterable is
+        stacked host-side).
 
         Returns:
           (final_state, boxes) with boxes (n, [t,] 4) — the bbox *after*
           each frame's update, bit-exact vs a per-frame ``step`` loop.
         """
+        import itertools
+
+        from repro.core.runtime import FrameRuntime
+
         if batch_size != "auto" and (
             not isinstance(batch_size, int) or batch_size < 1
         ):
@@ -174,37 +182,40 @@ class FragmentTracker:
             return state, jnp.zeros((0,) + state["bbox"].shape, jnp.int32)
 
         if hasattr(frames, "shape"):
-            # Array clip (host or device): chunk by slicing — no per-frame
-            # host round-trip, device arrays stay on device.
             if frames.ndim != 3:
                 raise ValueError(
                     f"track expects an (n, h, w) clip, got {frames.shape}; "
                     "use step() for a single frame")
             if frames.shape[0] == 0:
                 return empty()
-            if batch_size == "auto":
-                batch_size = auto_batch_size(
-                    self.config.num_bins, *frames.shape[-2:])
-            chunks = (
-                frames[s : s + batch_size]
-                for s in range(0, frames.shape[0], batch_size)
-            )
+            hw = frames.shape[-2:]
         else:
             it = iter(frames)
-            if batch_size == "auto":
-                try:
-                    first = np.asarray(next(it))
-                except StopIteration:
-                    return empty()
-                batch_size = auto_batch_size(
-                    self.config.num_bins, *first.shape[-2:])
-                it = itertools.chain([first], it)
-            chunks = stack_chunks(it, batch_size)
+            try:
+                first = np.asarray(next(it))
+            except StopIteration:
+                return empty()
+            hw = first.shape[-2:]
+            frames = itertools.chain([first], it)
+        if batch_size == "auto":
+            from repro.core import engine as _engine
 
-        boxes = []
-        for stack in chunks:
-            state, chunk_boxes = self._track_chunk(state, jnp.asarray(stack))
-            boxes.append(chunk_boxes)
+            cfg = self.config
+            batch_size = _engine.plan(_engine.WorkloadSpec(
+                height=hw[0], width=hw[1], num_bins=cfg.num_bins,
+                num_frames=None, method=cfg.method, backend=cfg.backend,
+            )).microbatch
+
+        def step(chunk, st):
+            st, chunk_boxes = self._track_chunk(st, jnp.asarray(chunk))
+            return chunk_boxes, st
+
+        # stage_inputs=False: a device-resident clip is chunked by
+        # slicing and must stay on ITS device — device_put would pin
+        # every chunk to devices()[0].
+        runtime = FrameRuntime(step, depth=2, microbatch=batch_size,
+                               carry_in=state, stage_inputs=False)
+        boxes, state = runtime.fold(frames, batched=True)
         if not boxes:
             return empty()
         return state, jnp.concatenate(boxes, axis=0)

@@ -1,0 +1,10 @@
+"""Serving front-end over the plan/execute engine (ROADMAP north star:
+heavy concurrent query traffic against the integral-histogram engine)."""
+
+from repro.serve.service import (
+    AnalyticsService,
+    ServiceOverloaded,
+    ServiceStats,
+)
+
+__all__ = ["AnalyticsService", "ServiceOverloaded", "ServiceStats"]

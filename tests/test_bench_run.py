@@ -74,6 +74,12 @@ def test_json_records_keyed_by_bench(fake_bench, tmp_path):
     assert {"median_s", "min_s", "iters"} <= set(records[0])
 
 
+def test_serve_bench_is_registered():
+    """ISSUE 5: the serving bench rides the registry (and --list)."""
+    names = [name for name, _, _ in bench_run.BENCHES]
+    assert "serve" in names
+
+
 def test_json_written_even_on_failure(monkeypatch, tmp_path):
     mod = types.ModuleType("_broken_bench")
 
@@ -91,3 +97,56 @@ def test_json_written_even_on_failure(monkeypatch, tmp_path):
     payload = json.loads(path.read_text())
     assert payload["failures"] == ["broken"]
     assert payload["benches"]["broken"] == []
+
+
+# ---------------------------------------------------------------------------
+# scripts/bench_compare.py — the CI perf-trajectory diff
+# ---------------------------------------------------------------------------
+def _payload(**benches):
+    return {
+        "smoke": True, "quick": True, "failures": [],
+        "benches": {
+            name: [{"median_s": t, "min_s": t, "iters": 1, "label": lbl}
+                   for lbl, t in recs]
+            for name, recs in benches.items()
+        },
+    }
+
+
+def _bench_compare():
+    import os
+
+    scripts = os.path.join(os.path.dirname(__file__), "..", "scripts")
+    sys.path.insert(0, scripts)
+    try:
+        import bench_compare
+    finally:
+        sys.path.pop(0)
+    return bench_compare
+
+
+def test_bench_compare_flags_regressions_only_past_threshold():
+    bench_compare = _bench_compare()
+    old = _payload(methods=[("a", 1.0), ("b", 2.0)], gone=[("x", 1.0)])
+    new = _payload(methods=[("a", 1.9), ("b", 2.1)],
+                   fresh=[("y", 0.5)])
+    table, regressions = bench_compare.compare(old, new, threshold=1.5)
+    assert regressions == 1                     # only a: 1.9x >= 1.5x
+    assert "1.90x" in table and "slower" in table
+    assert "1.05x" in table                     # b within threshold
+    assert "(removed)" in table and "new" in table
+
+
+def test_bench_compare_cli_roundtrip(tmp_path, capsys):
+    bench_compare = _bench_compare()
+    old_p, new_p = tmp_path / "old.json", tmp_path / "new.json"
+    old_p.write_text(json.dumps(_payload(serve=[("d1", 1.0)])))
+    new_p.write_text(json.dumps(_payload(serve=[("d1", 1.0)])))
+    out_p = tmp_path / "summary.md"
+    # regressions never fail the CLI (smoke noise must not gate merges)
+    assert bench_compare.main(
+        [str(old_p), str(new_p), "--output", str(out_p)]) == 0
+    assert "Bench trajectory" in out_p.read_text()
+    # unreadable input exits 2
+    assert bench_compare.main([str(tmp_path / "nope.json"),
+                               str(new_p)]) == 2

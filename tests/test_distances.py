@@ -1,0 +1,137 @@
+"""Direct unit tests for core/distances.py (previously only covered
+transitively through the analytics layer).
+
+Pins: metric bounds, the identical/disjoint-histogram fixed points,
+leading-axis broadcasting, and the PR 2 bhattacharyya eps-bias
+regression (eps inside the sqrt pushed identical histograms above 1)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distances
+from repro.core.distances import (
+    DISTANCES,
+    SIMILARITIES,
+    bhattacharyya,
+    chi2,
+    intersection,
+    l1,
+    l2,
+    normalize,
+)
+
+ALL_METRICS = {**SIMILARITIES, **DISTANCES}
+
+
+def _hists(rng, shape=(40,), bins=16):
+    return jnp.asarray(
+        rng.integers(0, 100, shape + (bins,)).astype(np.float32))
+
+
+def test_normalize_sums_to_one(rng):
+    h = _hists(rng)
+    np.testing.assert_allclose(
+        np.asarray(jnp.sum(normalize(h), axis=-1)), 1.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", sorted(ALL_METRICS))
+def test_metric_bounds(rng, name):
+    """intersection/bhattacharyya in [0, 1]; chi2 in [0, 1]; l1 in
+    [0, 2]; l2 in [0, sqrt(2)] — on normalized inputs."""
+    metric = ALL_METRICS[name]
+    a, b = _hists(rng), _hists(rng)
+    out = np.asarray(metric(a, b))
+    hi = {"intersection": 1.0, "bhattacharyya": 1.0, "chi2": 1.0,
+          "l1": 2.0, "l2": np.sqrt(2.0)}[name]
+    assert out.shape == (40,)
+    assert (out >= -1e-6).all()
+    assert (out <= hi + 1e-5).all()
+
+
+@pytest.mark.parametrize("name", sorted(ALL_METRICS))
+def test_identical_histogram_fixed_point(rng, name):
+    """Similarity of a histogram with itself is maximal (1); distance
+    is 0 — including scale invariance (2h vs h)."""
+    metric = ALL_METRICS[name]
+    h = _hists(rng)
+    for other in (h, 2.0 * h):
+        out = np.asarray(metric(h, other))
+        want = 1.0 if name in SIMILARITIES else 0.0
+        np.testing.assert_allclose(out, want, atol=2e-3)
+
+
+@pytest.mark.parametrize("name", sorted(ALL_METRICS))
+def test_disjoint_histogram_fixed_point(name):
+    """Non-overlapping histograms: similarity 0, distance maximal."""
+    metric = ALL_METRICS[name]
+    a = jnp.asarray([10.0, 20.0, 0.0, 0.0])
+    b = jnp.asarray([0.0, 0.0, 5.0, 15.0])
+    out = float(metric(a, b))
+    want = {"intersection": 0.0, "bhattacharyya": 0.0, "chi2": 1.0,
+            "l1": 2.0, "l2": None}[name]
+    if name == "l2":
+        assert out > 0.5
+    else:
+        np.testing.assert_allclose(out, want, atol=2e-3)
+
+
+@pytest.mark.parametrize("name", sorted(ALL_METRICS))
+def test_leading_axis_broadcasting(rng, name):
+    """(n, m, b) vs (b,) -> (n, m), matching the scalar loop."""
+    metric = ALL_METRICS[name]
+    stack = _hists(rng, shape=(3, 5))
+    target = _hists(rng, shape=())
+    out = np.asarray(metric(stack, target))
+    assert out.shape == (3, 5)
+    for i in range(3):
+        for j in range(5):
+            np.testing.assert_allclose(
+                out[i, j], float(metric(stack[i, j], target)), rtol=1e-5)
+
+
+def test_bhattacharyya_eps_bias_regression():
+    """PR 2: eps must stay OUT of the per-bin sqrt.  At 128 bins an
+    in-sqrt eps scored identical histograms ~1.0127 and disjoint ones
+    ~0.0128; the fixed metric pins both ends of [0, 1] tightly."""
+    bins = 128
+    h = jnp.zeros((bins,)).at[3].set(100.0)
+    same = float(bhattacharyya(h, h))
+    assert same <= 1.0 + 1e-6
+    np.testing.assert_allclose(same, 1.0, atol=1e-4)
+    a = jnp.zeros((bins,)).at[0].set(50.0)
+    b = jnp.zeros((bins,)).at[1].set(50.0)
+    disjoint = float(bhattacharyya(a, b))
+    assert abs(disjoint) < 1e-5          # the buggy metric gave ~0.0128
+
+
+def test_intersection_is_symmetric_and_monotone(rng):
+    a, b = _hists(rng), _hists(rng)
+    np.testing.assert_allclose(np.asarray(intersection(a, b)),
+                               np.asarray(intersection(b, a)), rtol=1e-6)
+    # mixing b toward a raises the intersection score
+    mixed = 0.5 * (normalize(a) + normalize(b))
+    closer = np.asarray(intersection(a, mixed))
+    apart = np.asarray(intersection(a, b))
+    assert (closer >= apart - 1e-5).all()
+
+
+def test_chi2_l1_l2_metric_axioms(rng):
+    a, b = _hists(rng), _hists(rng)
+    for d in (chi2, l1, l2):
+        np.testing.assert_allclose(np.asarray(d(a, b)),
+                                   np.asarray(d(b, a)), rtol=1e-5)
+        assert (np.asarray(d(a, b)) >= -1e-6).all()
+    # l1/l2 triangle inequality through a third histogram
+    c = _hists(rng)
+    for d in (l1, l2):
+        ab = np.asarray(d(a, b))
+        thru = np.asarray(d(a, c)) + np.asarray(d(c, b))
+        assert (ab <= thru + 1e-4).all()
+
+
+def test_registries_are_consistent():
+    assert set(SIMILARITIES) == {"intersection", "bhattacharyya"}
+    assert set(DISTANCES) == {"chi2", "l1", "l2"}
+    for name, fn in ALL_METRICS.items():
+        assert getattr(distances, name) is fn

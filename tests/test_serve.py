@@ -1,0 +1,199 @@
+"""AnalyticsService (repro/serve): coalescing, caching, backpressure.
+
+Acceptance (ISSUE 5): >= 2 same-frame queries coalesce into ONE engine
+run (compute-count probe), results are bit-exact vs direct engine runs,
+the HSource LRU behaves, and a full submit queue rejects loudly.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import distances
+from repro.core.engine import (
+    HistogramEngine,
+    LikelihoodQuery,
+    RegionQuery,
+    SlidingWindowQuery,
+)
+from repro.serve import AnalyticsService, ServiceOverloaded
+
+
+@pytest.fixture()
+def store(rng):
+    return {i: rng.integers(0, 256, (32, 24), dtype=np.uint8)
+            for i in range(6)}
+
+
+def _probed_engine(**kw):
+    """Engine + a counter incremented on every H computation."""
+    eng = HistogramEngine(8, backend="jnp", **kw)
+    calls = []
+    orig = eng.compute
+
+    def probe(*a, **k):
+        calls.append(1)
+        return orig(*a, **k)
+
+    eng.compute = probe
+    return eng, calls
+
+
+RECTS = np.array([2, 2, 10, 10])
+
+
+def test_same_frame_queries_coalesce_into_one_run(store):
+    eng, calls = _probed_engine()
+    svc = AnalyticsService(eng, store)
+    res = svc.process([
+        (0, RegionQuery(RECTS)),
+        (0, SlidingWindowQuery((8, 8), 4)),
+        (0, LikelihoodQuery(np.ones(8, np.float32), (8, 8),
+                            distances.intersection, 4)),
+        (1, RegionQuery(RECTS)),
+    ])
+    assert len(calls) == 2              # frame 0 ONE run for 3 queries
+    assert svc.stats.engine_runs == 2
+    assert svc.stats.coalesced == 2
+    # bit-exact vs direct engine runs
+    direct0 = eng.run(store[0], [RegionQuery(RECTS),
+                                 SlidingWindowQuery((8, 8), 4)])
+    np.testing.assert_array_equal(np.asarray(res[0]),
+                                  np.asarray(direct0.results[0]))
+    np.testing.assert_array_equal(np.asarray(res[1]),
+                                  np.asarray(direct0.results[1]))
+    direct1 = eng.run(store[1], [RegionQuery(RECTS)])
+    np.testing.assert_array_equal(np.asarray(res[3]),
+                                  np.asarray(direct1.results[0]))
+
+
+def test_cache_hit_skips_compute_and_lru_evicts(store):
+    eng, calls = _probed_engine()
+    svc = AnalyticsService(eng, store, cache_size=2)
+    svc.process([(0, RegionQuery(RECTS))])
+    svc.process([(0, RegionQuery(RECTS))])          # hit
+    assert len(calls) == 1
+    assert svc.stats.cache_hits == 1
+    svc.process([(1, RegionQuery(RECTS))])
+    svc.process([(2, RegionQuery(RECTS))])          # evicts 0 (LRU)
+    assert svc.cached_frames == (1, 2)
+    svc.process([(0, RegionQuery(RECTS))])          # miss again
+    assert len(calls) == 4
+    # hit results identical to miss results
+    a = svc.process([(2, RegionQuery(RECTS))])[0]   # hit
+    b = eng.run(store[2], [RegionQuery(RECTS)]).results[0]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_cache_disabled(store):
+    eng, calls = _probed_engine()
+    svc = AnalyticsService(eng, store, cache_size=0)
+    svc.process([(0, RegionQuery(RECTS))])
+    svc.process([(0, RegionQuery(RECTS))])
+    assert len(calls) == 2 and svc.cached_frames == ()
+    assert svc.stats.cache_hits == 0
+
+
+def test_banded_engine_cache_hits_replay_the_stream(store):
+    """A banded plan caches the replayable BandedH; hits re-stream with
+    the multi-query corner-row union, results bit-exact vs dense."""
+    budget = 4 * 8 * 24 * 8             # 8-row bands for 32x24 @ 8 bins
+    eng, calls = _probed_engine(memory_budget_bytes=budget)
+    svc = AnalyticsService(eng, store, cache_size=2)
+    qs = [RegionQuery(RECTS), SlidingWindowQuery((8, 8), 8)]
+    first = svc.process([(3, q) for q in qs])
+    assert eng.last_plan.representation == "banded"
+    again = svc.process([(3, q) for q in qs])       # cache hit, 2 queries
+    assert len(calls) == 1
+    dense = HistogramEngine(8, backend="jnp").run(store[3], qs).results
+    for got in (first, again):
+        for g, want in zip(got, dense):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(want))
+
+
+def test_threaded_submit_and_futures(store):
+    eng, calls = _probed_engine()
+    with AnalyticsService(eng, store, cache_size=4) as svc:
+        futs = [svc.submit(i % 2, RegionQuery(RECTS), block=True)
+                for i in range(10)]
+        outs = [f.result(timeout=60) for f in futs]
+    assert len(outs) == 10
+    assert len(calls) <= 2              # 2 distinct frames
+    want = eng.run(store[0], [RegionQuery(RECTS)]).results[0]
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(want))
+    snap = svc.stats.snapshot()
+    assert snap["completed"] == 10
+    assert snap["requests"] == 10
+    assert snap["requests_per_s"] > 0
+    assert snap["latency_p95_s"] >= snap["latency_p50_s"] >= 0
+
+
+def test_backpressure_rejects_when_queue_full(store):
+    eng, _ = _probed_engine()
+    svc = AnalyticsService(eng, store, max_pending=2)
+    # not started: submit refuses outright
+    with pytest.raises(RuntimeError, match="not started"):
+        svc.submit(0, RegionQuery(RECTS))
+    # fill the queue while the worker is blocked on a slow resolver
+    gate = threading.Event()
+
+    def slow_resolve(ref):
+        gate.wait(timeout=60)
+        return store[ref]
+
+    svc2 = AnalyticsService(eng, slow_resolve, max_pending=2,
+                            max_coalesce=1).start()
+    try:
+        futs = [svc2.submit(0, RegionQuery(RECTS))]   # worker takes this
+        import time
+        deadline = time.time() + 5
+        overloaded = False
+        while time.time() < deadline and not overloaded:
+            try:
+                futs.append(svc2.submit(1, RegionQuery(RECTS)))
+            except ServiceOverloaded:
+                overloaded = True
+        assert overloaded
+        assert svc2.stats.rejected >= 1
+    finally:
+        gate.set()
+        svc2.close()
+    for f in futs:
+        f.result(timeout=60)
+
+
+def test_close_fails_requests_that_raced_past_the_worker(store):
+    """A submit landing on the queue after the worker's final drain must
+    not hang forever — close() fails its future."""
+    from repro.serve.service import _Pending
+    from concurrent.futures import Future
+
+    eng, _ = _probed_engine()
+    svc = AnalyticsService(eng, store).start()
+    svc.close()
+    p = _Pending(0, RegionQuery(RECTS), 0.0, Future())
+    svc._queue.put_nowait(p)             # the race, made deterministic
+    svc.close()
+    with pytest.raises(RuntimeError, match="closed before"):
+        p.future.result(timeout=1)
+
+
+def test_worker_failure_lands_on_the_future(store):
+    eng, _ = _probed_engine()
+
+    def resolve(ref):
+        raise KeyError(f"no frame {ref}")
+
+    with AnalyticsService(eng, resolve) as svc:
+        fut = svc.submit(99, RegionQuery(RECTS), block=True)
+        with pytest.raises(KeyError):
+            fut.result(timeout=60)
+
+
+def test_bad_config_rejected(store):
+    eng, _ = _probed_engine()
+    for kw in (dict(cache_size=-1), dict(max_pending=0),
+               dict(max_coalesce=0)):
+        with pytest.raises(ValueError):
+            AnalyticsService(eng, store, **kw)
