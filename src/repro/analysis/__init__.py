@@ -1,0 +1,59 @@
+"""Static analysis for the project's invariants.
+
+Two layers:
+
+  * :mod:`repro.analysis.lint` + :mod:`repro.analysis.rules` — the
+    AST lint engine and the six project rules (sharded-concat,
+    host-sync, carry-contract, no-shim-use, overflow-policy,
+    lock-discipline).  Stdlib-only: CI runs ``python -m repro.analysis
+    --check`` without installing jax.
+  * :mod:`repro.analysis.plancheck` — the static plan validator
+    (``jax.eval_shape`` abstract interpretation over an
+    ``ExecutionPlan``); imported lazily because it needs jax.
+    ``HistogramEngine.validate(plan)`` is the wired-in entry point.
+"""
+
+from repro.analysis import rules as rules          # registers the rule set
+from repro.analysis.lint import (
+    BASELINE_DEFAULT,
+    Finding,
+    FileContext,
+    Rule,
+    RULES,
+    gate,
+    lint_paths,
+    lint_source,
+    load_baseline,
+    render_json,
+    render_text,
+    write_baseline,
+)
+
+__all__ = [
+    "BASELINE_DEFAULT",
+    "Finding",
+    "FileContext",
+    "Rule",
+    "RULES",
+    "gate",
+    "lint_paths",
+    "lint_source",
+    "load_baseline",
+    "render_json",
+    "render_text",
+    "write_baseline",
+    "check_plan",
+    "PlanVerdict",
+    "PlanCheck",
+]
+
+
+def __getattr__(name):
+    # plancheck needs jax; load it only when asked for.
+    if name in ("check_plan", "PlanVerdict", "PlanCheck", "plancheck"):
+        from repro.analysis import plancheck
+
+        if name == "plancheck":
+            return plancheck
+        return getattr(plancheck, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,116 @@
+"""``python -m repro.analysis`` — run the project lint rules.
+
+Exit codes: 0 clean (or informational modes), 1 gating findings,
+2 usage error.
+
+Typical invocations (from the repo root):
+
+    PYTHONPATH=src python -m repro.analysis --check
+    PYTHONPATH=src python -m repro.analysis --check --json report.json
+    PYTHONPATH=src python -m repro.analysis --write-baseline
+    PYTHONPATH=src python -m repro.analysis --list-rules
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis.lint import (
+    BASELINE_DEFAULT,
+    RULES,
+    gate,
+    lint_paths,
+    load_baseline,
+    render_json,
+    render_text,
+    write_baseline,
+)
+
+DEFAULT_PATHS = ("src/repro", "benchmarks", "examples")
+
+
+def find_root(start: Path) -> Path:
+    """Nearest ancestor holding the repo markers (so the CLI works from
+    subdirectories too); falls back to ``start``."""
+    for p in (start, *start.parents):
+        if (p / "src" / "repro").is_dir():
+            return p
+    return start
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Lint the tree against the project invariant rules.",
+    )
+    parser.add_argument(
+        "paths", nargs="*",
+        help=f"files/dirs to lint (default: {' '.join(DEFAULT_PATHS)})",
+    )
+    parser.add_argument(
+        "--root", default=None,
+        help="repo root for relative paths and the baseline "
+             "(default: auto-detected from cwd)",
+    )
+    parser.add_argument(
+        "--check", action="store_true",
+        help="exit 1 if any non-baselined, non-suppressed finding remains",
+    )
+    parser.add_argument(
+        "--json", metavar="FILE", default=None,
+        help="also write the full JSON report to FILE ('-' for stdout)",
+    )
+    parser.add_argument(
+        "--baseline", metavar="FILE", default=None,
+        help=f"baseline file (default: <root>/{BASELINE_DEFAULT})",
+    )
+    parser.add_argument(
+        "--write-baseline", action="store_true",
+        help="record current unsuppressed findings as the new baseline",
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true",
+        help="print the registered rules and exit",
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for name, rule in sorted(RULES.items()):
+            print(f"{name:18s} allow-{rule.pragma:18s} {rule.description}")
+        return 0
+
+    root = find_root(Path(args.root or ".").resolve())
+    paths = args.paths or [p for p in DEFAULT_PATHS if (root / p).exists()]
+    if not paths:
+        print(f"no default paths exist under {root}", file=sys.stderr)
+        return 2
+    baseline_path = Path(args.baseline) if args.baseline \
+        else root / BASELINE_DEFAULT
+
+    findings = lint_paths(paths, root=root)
+
+    if args.write_baseline:
+        n = write_baseline(findings, baseline_path)
+        print(f"wrote {n} fingerprint(s) to {baseline_path}")
+        return 0
+
+    baseline = load_baseline(baseline_path)
+    gating = gate(findings, baseline)
+
+    print(render_text(findings, gating, baseline))
+    if args.json:
+        report = render_json(findings, gating, baseline)
+        if args.json == "-":
+            print(report)
+        else:
+            Path(args.json).write_text(report + "\n")
+
+    if args.check and gating:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

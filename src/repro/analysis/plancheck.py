@@ -1,0 +1,384 @@
+"""Static plan validation: decide feasibility before a dispatch runs.
+
+Ehsan et al.'s embedded integral-image work (arXiv:1510.05138) frames
+compute-vs-store feasibility as a *decidable, up-front* check.  This
+module is that check for an :class:`~repro.core.engine.ExecutionPlan`:
+an abstract interpretation over the plan using ``jax.eval_shape`` (no
+FLOPs, no device memory) plus the planner's own metadata.
+
+``check_plan(plan, queries=())`` verifies, without executing:
+
+  * **representation** — the plan's decision is internally consistent
+    (known representation, mesh-axis divisibility for sharded plans);
+  * **h-shape** — the kernel the plan selects produces the (..., b, h, w)
+    fp32 H the representation expects, via ``jax.eval_shape``;
+  * **carry-chain** — every band height in the band plan accepts and
+    re-emits the (..., b, w) bottom-row carry (again by eval_shape);
+  * **memory-budget** — the peak *live* H footprint (microbatch x
+    per-frame H for dense, the largest band for banded/spilled) fits
+    ``memory_budget_bytes``;
+  * **vmem-fit** — Pallas plans: the per-core VMEM working set
+    (double-buffered in/out blocks + carry + scratch) fits the ~16 MiB
+    budget, from the kernels' block specs;
+  * **count-validity** — the §4.6 exactness regime: storage-policy
+    plans hard-fail when the frame's pixel count exceeds the fp32
+    exact-integer range (mirroring ``validate_storage_policy``);
+    plain fp32 plans get a warning, since per-query bounds are
+    enforced at query time;
+  * **query-validity** — when queries are supplied: each query's
+    largest region/window area fits the plan's exact-count bound
+    (``uint16``: 65535 px of modular arithmetic).
+
+The structural verdict is cached per plan (plans are frozen,
+hashable dataclasses), so ``HistogramEngine.validate`` — run before
+every dispatch — costs a dict lookup after the first call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import numpy as np
+
+from repro.core.bands import FP32_EXACT_COUNT, STORAGE_POLICIES
+
+#: per-core VMEM budget the Pallas kernels must fit (bytes).
+VMEM_LIMIT_BYTES = 16 << 20
+
+_STATUS_ORDER = ("fail", "warn", "ok", "skip")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCheck:
+    """One verified property: ``status`` is ok | warn | fail | skip."""
+
+    name: str
+    status: str
+    detail: str
+
+    def render(self) -> str:
+        return f"{self.status.upper():4s} {self.name:15s} {self.detail}"
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanVerdict:
+    """The static feasibility verdict for one plan."""
+
+    checks: tuple[PlanCheck, ...]
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
+
+    @property
+    def failures(self) -> tuple[PlanCheck, ...]:
+        return tuple(c for c in self.checks if c.status == "fail")
+
+    def render(self) -> str:
+        head = "plan verdict    : " + (
+            "OK (statically feasible)" if self.ok
+            else f"REJECTED ({len(self.failures)} infeasible)"
+        )
+        lines = [head]
+        lines += [f"  {c.render()}" for c in self.checks]
+        return "\n".join(lines)
+
+    def summary(self) -> str:
+        counts = {s: 0 for s in _STATUS_ORDER}
+        for c in self.checks:
+            counts[c.status] = counts.get(c.status, 0) + 1
+        return ", ".join(f"{v} {k}" for k, v in counts.items() if v)
+
+
+# ---------------------------------------------------------------------------
+# the checks
+# ---------------------------------------------------------------------------
+def _lead(plan) -> tuple:
+    nf = plan.spec.num_frames
+    return () if nf is None or nf == 1 else (int(nf),)
+
+
+def _eval_kernel(plan, h: int, w: int, *, with_carry: bool):
+    """``jax.eval_shape`` the plan's kernel on an abstract (lead, h, w)
+    frame; returns the output ShapeDtypeStruct."""
+    from repro.kernels.ops import integral_histogram
+
+    s = plan.spec
+    lead = _lead(plan)
+    img = jax.ShapeDtypeStruct((*lead, h, w), np.dtype(s.dtype))
+    carry = (
+        jax.ShapeDtypeStruct((*lead, s.num_bins, w), np.float32)
+        if with_carry else None
+    )
+
+    def fn(image, carry_in):
+        return integral_histogram(
+            image, s.num_bins, method=plan.method, backend=plan.backend,
+            tile=plan.tile, bin_block=plan.bin_block, use_mxu=s.use_mxu,
+            interpret=s.interpret, value_range=s.value_range,
+            carry_in=carry_in,
+        )
+
+    return jax.eval_shape(fn, img, carry)
+
+
+def _check_representation(plan) -> PlanCheck:
+    name = "representation"
+    s = plan.spec
+    known = ("dense", "banded", "spilled", "sharded")
+    if plan.representation not in known:
+        return PlanCheck(name, "fail",
+                         f"unknown representation {plan.representation!r}")
+    if plan.representation == "sharded":
+        if s.mesh is None:
+            return PlanCheck(name, "fail", "sharded plan without a mesh")
+        shape = dict(s.mesh.shape)
+        axis = s.bin_axis if plan.sharding == "bin" else s.row_axis
+        size = shape.get(axis)
+        if size is None:
+            return PlanCheck(
+                name, "fail",
+                f"mesh has no {axis!r} axis (axes: {sorted(shape)})")
+        extent = s.num_bins if plan.sharding == "bin" else s.height
+        what = "num_bins" if plan.sharding == "bin" else "height"
+        if extent % size != 0:
+            return PlanCheck(
+                name, "fail",
+                f"{what}={extent} not divisible by mesh axis "
+                f"{axis!r} ({size} devices)")
+        return PlanCheck(
+            name, "ok",
+            f"sharded[{plan.sharding}]: {what}={extent} over "
+            f"{size} devices")
+    if plan.storage is not None and plan.representation != "spilled":
+        return PlanCheck(
+            name, "fail",
+            f"storage policy {plan.storage!r} on a "
+            f"{plan.representation!r} plan (must spill)")
+    return PlanCheck(name, "ok", plan.representation)
+
+
+def _check_h_shape(plan) -> PlanCheck:
+    name = "h-shape"
+    s = plan.spec
+    try:
+        out = _eval_kernel(plan, s.height, s.width, with_carry=False)
+    except Exception as e:  # abstract eval surfaces kernel/shape errors
+        return PlanCheck(name, "fail", f"kernel abstract eval: {e}")
+    expect = (*_lead(plan), s.num_bins, s.height, s.width)
+    if tuple(out.shape) != expect:
+        return PlanCheck(
+            name, "fail",
+            f"kernel yields {tuple(out.shape)}, plan expects {expect}")
+    if out.dtype != np.float32:
+        return PlanCheck(
+            name, "fail",
+            f"kernel yields {out.dtype}, engine arithmetic is fp32")
+    return PlanCheck(
+        name, "ok", f"{expect} float32 via {plan.method}/{plan.backend}")
+
+
+def _check_carry_chain(plan) -> PlanCheck:
+    name = "carry-chain"
+    s = plan.spec
+    if plan.band_plan is None:
+        return PlanCheck(name, "skip", "single-band plan has no carry")
+    heights = sorted({r1 - r0 for r0, r1 in plan.band_plan.spans})
+    carry_shape = (*_lead(plan), s.num_bins, s.width)
+    for bh in heights:
+        try:
+            out = _eval_kernel(plan, bh, s.width, with_carry=True)
+        except Exception as e:
+            return PlanCheck(
+                name, "fail",
+                f"{bh}-row band rejects the {carry_shape} carry: {e}")
+        band_expect = (*_lead(plan), s.num_bins, bh, s.width)
+        if tuple(out.shape) != band_expect:
+            return PlanCheck(
+                name, "fail",
+                f"{bh}-row band yields {tuple(out.shape)}, "
+                f"expected {band_expect}")
+        # next carry = H_band[..., -1, :]; shape follows from band_expect
+        emitted = band_expect[:-2] + band_expect[-1:]
+        if emitted != carry_shape:
+            return PlanCheck(
+                name, "fail",
+                f"{bh}-row band re-emits carry {emitted}, "
+                f"chain needs {carry_shape}")
+    return PlanCheck(
+        name, "ok",
+        f"{plan.band_plan.num_bands} bands (heights {heights}) thread a "
+        f"{carry_shape} carry")
+
+
+def _check_memory_budget(plan) -> PlanCheck:
+    name = "memory-budget"
+    s = plan.spec
+    budget = s.memory_budget_bytes
+    if budget is None:
+        return PlanCheck(name, "skip", "no memory budget declared")
+    if plan.band_plan is not None:
+        live = plan.band_plan.band_bytes
+        what = f"largest band ({plan.band_plan.band_h} rows)"
+    else:
+        live = plan.microbatch * s.per_frame_h_bytes
+        what = f"microbatch of {plan.microbatch} frame(s)"
+    if live > budget:
+        return PlanCheck(
+            name, "fail",
+            f"{what} holds {live} B of live H > {budget} B budget")
+    return PlanCheck(name, "ok", f"{what}: {live} B <= {budget} B budget")
+
+
+def _vmem_estimate(plan) -> tuple[int, str] | None:
+    """Estimated per-core VMEM bytes for the plan's Pallas kernel, from
+    its block specs (double-buffered in/out + carry + scratch), or
+    ``None`` for methods without a Pallas kernel model."""
+    s = plan.spec
+    t, bb = plan.tile, plan.bin_block
+    nbb = math.ceil(s.num_bins / bb)
+    w_pad = math.ceil(s.width / t) * t
+    if plan.method == "wf_tis":
+        in_block = t * t                       # (1, tile, tile) image tile
+        carry_block = bb * t                   # (1, bin_block, tile)
+        out_block = bb * t * t                 # (1, bin_block, tile, tile)
+        scratch = nbb * bb * t + nbb * bb * w_pad   # row + col carries
+    elif plan.method == "cw_tis":
+        in_block = t * t
+        carry_block = bb * t
+        out_block = bb * t * t
+        scratch = 2 * bb * t                   # per-pass column scratch
+    else:
+        return None
+    words = 2 * (in_block + out_block) + carry_block + scratch
+    detail = (
+        f"2x({t}x{t} in + {bb}x{t}x{t} out) + {bb}x{t} carry + "
+        f"{scratch} scratch words"
+    )
+    return 4 * words, detail
+
+
+def _check_vmem_fit(plan) -> PlanCheck:
+    name = "vmem-fit"
+    if plan.backend != "pallas":
+        return PlanCheck(name, "skip", f"{plan.backend} backend uses HBM")
+    if plan.spec.interpret:
+        return PlanCheck(name, "skip", "interpret mode runs on host")
+    est = _vmem_estimate(plan)
+    if est is None:
+        return PlanCheck(
+            name, "skip", f"no VMEM model for method {plan.method!r}")
+    nbytes, detail = est
+    if nbytes > VMEM_LIMIT_BYTES:
+        return PlanCheck(
+            name, "fail",
+            f"~{nbytes} B ({detail}) exceeds the {VMEM_LIMIT_BYTES} B "
+            f"per-core VMEM budget — shrink tile/bin_block")
+    return PlanCheck(
+        name, "ok", f"~{nbytes} B of {VMEM_LIMIT_BYTES} B ({detail})")
+
+
+def _plan_exact_bound(plan) -> int:
+    """Largest region pixel count queries on this plan read back exactly."""
+    if plan.storage is not None:
+        return int(STORAGE_POLICIES[plan.storage][1])
+    return FP32_EXACT_COUNT - 1
+
+
+def _check_count_validity(plan) -> PlanCheck:
+    name = "count-validity"
+    s = plan.spec
+    px = s.height * s.width
+    if plan.storage is not None:
+        bound = _plan_exact_bound(plan)
+        if px >= FP32_EXACT_COUNT:
+            return PlanCheck(
+                name, "fail",
+                f"{s.height}x{s.width} frame accumulates up to {px} "
+                f"counts, beyond fp32 exact range {FP32_EXACT_COUNT} — "
+                f"no storage policy recovers exactness; shard spatially")
+        return PlanCheck(
+            name, "ok",
+            f"{plan.storage} spill: regions <= {bound} px exact "
+            f"(modular arithmetic)")
+    if px >= FP32_EXACT_COUNT:
+        return PlanCheck(
+            name, "warn",
+            f"{px}-px frame exceeds the fp32 exact range "
+            f"{FP32_EXACT_COUNT}; only regions <= "
+            f"{FP32_EXACT_COUNT - 1} px are exact (enforced per query)")
+    return PlanCheck(
+        name, "ok", f"{px}-px frame within fp32 exact range")
+
+
+def _query_area(query) -> int | None:
+    """Largest region/window pixel area a query touches, else None."""
+    rects = getattr(query, "rects", None)
+    if rects is not None:
+        r = np.asarray(rects).reshape(-1, 4)
+        if r.size == 0:
+            return 0
+        return int(((r[:, 2] - r[:, 0] + 1)
+                    * (r[:, 3] - r[:, 1] + 1)).max())
+    windows = getattr(query, "windows", None)
+    if windows is not None:
+        return max((int(wh) * int(ww) for wh, ww in windows), default=0)
+    window = getattr(query, "window", None)
+    if window is not None:
+        wh, ww = window
+        return int(wh) * int(ww)
+    return None
+
+
+def _check_queries(plan, queries) -> PlanCheck:
+    name = "query-validity"
+    bound = _plan_exact_bound(plan)
+    worst = 0
+    opaque = 0
+    for q in queries:
+        area = _query_area(q)
+        if area is None:
+            opaque += 1
+            continue
+        if area > bound:
+            return PlanCheck(
+                name, "fail",
+                f"{type(q).__name__} touches a {area}-px region, beyond "
+                f"the plan's exact-count bound {bound} px"
+                + (f" ({plan.storage} modular arithmetic wraps)"
+                   if plan.storage else " (fp32 exactness)"))
+        worst = max(worst, area)
+    detail = f"largest region {worst} px <= {bound} px bound"
+    if opaque:
+        detail += f" ({opaque} query(ies) undeclared — checked at run time)"
+    return PlanCheck(name, "ok", detail)
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=256)
+def _structural_checks(plan) -> tuple[PlanCheck, ...]:
+    return (
+        _check_representation(plan),
+        _check_h_shape(plan),
+        _check_carry_chain(plan),
+        _check_memory_budget(plan),
+        _check_vmem_fit(plan),
+        _check_count_validity(plan),
+    )
+
+
+def check_plan(plan, queries=()) -> PlanVerdict:
+    """Statically verify a plan (and optionally its queries).
+
+    Structural checks are cached per plan; the query check is cheap
+    arithmetic computed fresh (queries carry unhashable arrays)."""
+    checks = _structural_checks(plan)
+    queries = tuple(queries) if not isinstance(queries, tuple) else queries
+    if queries:
+        checks = checks + (_check_queries(plan, queries),)
+    return PlanVerdict(checks=checks)

@@ -1,0 +1,480 @@
+"""The project's invariant rules.
+
+Each rule encodes one contract the engine rests on — previously only a
+docstring, a one-off test monkeypatch, or a run-time failure:
+
+  * ``sharded-concat``   — the jax-0.4.37 hazard (core/hsource.py:28):
+    ``jnp.concatenate``/``jnp.stack`` over device bands or shards
+    silently mis-assembles; cross-band/shard assembly must be host-side
+    (``np.asarray`` per piece, then ``np.concatenate``).
+  * ``host-sync``        — a host sync (``np.asarray``,
+    ``block_until_ready``, ``.item()``, ``device_get``) inside
+    ``FrameRuntime`` dispatch or a kernel wrapper serializes the §4.4
+    double-buffering overlap.  Sanctioned sync points carry a pragma.
+  * ``carry-contract``   — any function passed as a runtime ``step``
+    must be ``step(chunk, carry) -> (out, carry)``.
+  * ``no-shim-use``      — internal code must not call the deprecated
+    ``banded_*`` shims; the unified HSource entry points replace them.
+  * ``overflow-policy``  — every storage policy must declare a
+    statically-known validity bound (the §4.6 uint16/fp32 regime), and
+    a storage-policy HSource must expose ``exact_region_bound``.
+  * ``lock-discipline``  — attributes a class declares in
+    ``_LOCK_PROTECTED`` may only be mutated under ``with self._lock:``
+    (the close()/drain race class fixed in PR 5).
+
+Suppress a deliberate exception with
+``# analysis: allow-<rule>(reason)`` on (or directly above) the line.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator
+
+from repro.analysis.lint import (
+    FileContext,
+    Rule,
+    const_int,
+    dotted_name,
+    module_int_env,
+    register,
+)
+
+# deprecated shims defined (and allowed) only in core/region_query.py
+SHIM_NAMES = frozenset({
+    "banded_region_histogram",
+    "banded_sliding_window_histograms",
+    "banded_likelihood_map",
+})
+
+# modules whose whole job is cross-band/cross-shard assembly: any
+# device-side concat there is on the hazard path.
+ASSEMBLY_FILES = frozenset({"hsource.py", "bands.py", "distributed.py"})
+
+_CONCAT_FNS = frozenset({
+    "jnp.concatenate", "jnp.stack",
+    "jax.numpy.concatenate", "jax.numpy.stack",
+})
+
+_SYNC_CALLS = frozenset({
+    "np.asarray", "numpy.asarray",
+    "jax.block_until_ready", "jax.device_get",
+})
+
+# container mutators always treated as writes on a protected attribute
+_MUTATORS = frozenset({
+    "append", "extend", "insert", "remove", "pop", "popitem", "clear",
+    "update", "setdefault", "move_to_end", "add", "discard", "appendleft",
+})
+
+
+def _walk_calls(tree: ast.AST) -> Iterator[ast.Call]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            yield node
+
+
+@register
+class ShardedConcatRule(Rule):
+    name = "sharded-concat"
+    pragma = "sharded-concat"
+    description = (
+        "no jnp.concatenate/jnp.stack over band or shard operands in "
+        "core/ assembly paths — under jax 0.4.37 a device-side concat of "
+        "row-sharded bands silently mis-assembles; go host-side "
+        "(np.asarray each piece, np.concatenate) as hsource.py does"
+    )
+
+    def applies_to(self, ctx: FileContext) -> bool:
+        return "core" in ctx.parts
+
+    def check(self, ctx: FileContext) -> Iterable[tuple[int, str]]:
+        assembly = ctx.filename in ASSEMBLY_FILES
+        for call in _walk_calls(ctx.tree):
+            dn = dotted_name(call.func)
+            if dn not in _CONCAT_FNS:
+                continue
+            operands = " ".join(
+                ast.unparse(a) for a in list(call.args) + [
+                    kw.value for kw in call.keywords
+                ]
+            ).lower()
+            banded = "band" in operands or "shard" in operands
+            if assembly or banded:
+                what = "band/shard operands" if banded else \
+                    f"an assembly module ({ctx.filename})"
+                yield call.lineno, (
+                    f"{dn} over {what}: device-side concat of banded or "
+                    "sharded pieces is the jax-0.4.37 silent-mis-assembly "
+                    "hazard — assemble host-side (np.asarray per piece, "
+                    "then np.concatenate)"
+                )
+
+
+@register
+class HostSyncRule(Rule):
+    name = "host-sync"
+    pragma = "host-sync"
+    description = (
+        "no np.asarray / block_until_ready / .item() / device_get in "
+        "FrameRuntime dispatch or kernel wrappers — a host sync there "
+        "serializes the double-buffered overlap; sanctioned sync points "
+        "need `# analysis: allow-host-sync(reason)`"
+    )
+
+    def applies_to(self, ctx: FileContext) -> bool:
+        return (
+            ctx.relpath.endswith("core/runtime.py")
+            or "kernels" in ctx.parts
+        )
+
+    def check(self, ctx: FileContext) -> Iterable[tuple[int, str]]:
+        for call in _walk_calls(ctx.tree):
+            dn = dotted_name(call.func)
+            if dn in _SYNC_CALLS:
+                yield call.lineno, (
+                    f"{dn} is a host sync in a hot path — it stalls the "
+                    "dispatch pipeline until the device catches up"
+                )
+                continue
+            if isinstance(call.func, ast.Attribute) and \
+                    call.func.attr in ("item", "block_until_ready"):
+                yield call.lineno, (
+                    f".{call.func.attr}() is a host sync in a hot "
+                    "path — it stalls the dispatch pipeline"
+                )
+
+
+@register
+class CarryContractRule(Rule):
+    name = "carry-contract"
+    pragma = "carry-contract"
+    description = (
+        "a function passed as a runtime `step` must satisfy "
+        "step(chunk, carry) -> (out, carry): take exactly two arguments "
+        "and return a two-tuple on every path"
+    )
+
+    def check(self, ctx: FileContext) -> Iterable[tuple[int, str]]:
+        # local function definitions, for resolving `step` by name
+        defs: dict[str, ast.FunctionDef] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs[node.name] = node
+
+        for call in _walk_calls(ctx.tree):
+            dn = dotted_name(call.func)
+            if dn is None:
+                continue
+            leaf = dn.split(".")[-1]
+            if leaf == "FrameRuntime":
+                step = call.args[0] if call.args else next(
+                    (kw.value for kw in call.keywords if kw.arg == "step"),
+                    None,
+                )
+            elif leaf == "runtime_for":
+                step = call.args[1] if len(call.args) > 1 else next(
+                    (kw.value for kw in call.keywords if kw.arg == "step"),
+                    None,
+                )
+            else:
+                continue
+            if step is None:
+                continue
+            yield from self._check_step(step, defs)
+
+    def _check_step(self, step: ast.AST, defs: dict) -> Iterator[tuple[int, str]]:
+        # FrameRuntime.stateless(fn) lifts fn into the contract — fine.
+        if isinstance(step, ast.Call):
+            dn = dotted_name(step.func)
+            if dn is not None and dn.split(".")[-1] == "stateless":
+                return
+            return  # other call results are unresolvable — skip
+        if isinstance(step, ast.Lambda):
+            sig = list(self._check_signature(step, step.args, "lambda"))
+            if sig:
+                yield from sig     # wrong arity subsumes the return check
+                return
+            params = {a.arg for a in step.args.args}
+            if not self._returns_pair(step.body, params):
+                yield step.lineno, (
+                    "step lambda must return a two-tuple (out, carry)"
+                )
+            return
+        if isinstance(step, ast.Name) and step.id in defs:
+            fn = defs[step.id]
+            sig = list(self._check_signature(fn, fn.args, f"def {fn.name}"))
+            if sig:
+                yield from sig     # wrong arity subsumes the return check
+                return
+            params = {a.arg for a in fn.args.args}
+            returns = [
+                n for n in ast.walk(fn)
+                if isinstance(n, ast.Return) and n.value is not None
+            ]
+            for ret in returns:
+                if not self._returns_pair(ret.value, params):
+                    yield ret.lineno, (
+                        f"step `{fn.name}` must return a two-tuple "
+                        "(out, carry) on every path"
+                    )
+        # anything else (parameter, attribute, comprehension) — skip
+
+    @staticmethod
+    def _check_signature(node, args: ast.arguments, label: str):
+        n_pos = len(args.args) + len(args.posonlyargs)
+        if n_pos != 2 or args.vararg or args.kwonlyargs:
+            yield node.lineno, (
+                f"step {label} must take exactly (chunk, carry), "
+                f"got {n_pos} positional arg(s)"
+            )
+
+    @staticmethod
+    def _returns_pair(expr: ast.AST, params: set) -> bool:
+        if isinstance(expr, ast.Tuple):
+            return len(expr.elts) == 2
+        if isinstance(expr, ast.Name):
+            # returning a bare parameter is the classic carry-drop bug;
+            # other names (locals built as tuples) are unresolvable
+            return expr.id not in params
+        # non-literal returns (calls, attributes) are unresolvable — trust
+        return not isinstance(expr, (ast.Constant, ast.List, ast.Dict))
+
+
+@register
+class NoShimUseRule(Rule):
+    name = "no-shim-use"
+    pragma = "shim-use"
+    description = (
+        "internal code must not import or call the deprecated banded_* "
+        "shims (banded_region_histogram & co.) — the unified HSource "
+        "entry points in core/region_query.py accept a BandedH directly"
+    )
+
+    def applies_to(self, ctx: FileContext) -> bool:
+        # the defining module keeps the shims until their removal release
+        return ctx.filename != "region_query.py"
+
+    def check(self, ctx: FileContext) -> Iterable[tuple[int, str]]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ImportFrom):
+                for alias in node.names:
+                    if alias.name in SHIM_NAMES:
+                        yield node.lineno, (
+                            f"imports deprecated shim `{alias.name}` — "
+                            "use the unified entry point on an HSource"
+                        )
+            elif isinstance(node, ast.Attribute) and node.attr in SHIM_NAMES:
+                yield node.lineno, (
+                    f"references deprecated shim `{node.attr}` — use the "
+                    "unified entry point on an HSource"
+                )
+            elif isinstance(node, ast.Name) and node.id in SHIM_NAMES \
+                    and isinstance(node.ctx, ast.Load):
+                yield node.lineno, (
+                    f"uses deprecated shim `{node.id}` — use the unified "
+                    "entry point on an HSource"
+                )
+
+
+@register
+class OverflowPolicyRule(Rule):
+    name = "overflow-policy"
+    pragma = "overflow-policy"
+    description = (
+        "every STORAGE_POLICIES entry must be (dtype, bound) with a "
+        "statically-known integer validity bound (§4.6 exact-count "
+        "regime), and any HSource carrying a `storage` policy field "
+        "must expose exact_region_bound()"
+    )
+
+    def check(self, ctx: FileContext) -> Iterable[tuple[int, str]]:
+        env = module_int_env(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name) and \
+                            tgt.id == "STORAGE_POLICIES":
+                        yield from self._check_policies(node.value, env)
+            elif isinstance(node, ast.ClassDef):
+                yield from self._check_storage_class(node)
+
+    @staticmethod
+    def _check_policies(value: ast.AST, env: dict) -> Iterator[tuple[int, str]]:
+        if not isinstance(value, ast.Dict):
+            yield value.lineno, (
+                "STORAGE_POLICIES must be a literal dict so the bounds "
+                "are statically checkable"
+            )
+            return
+        for key, val in zip(value.keys, value.values):
+            name = ast.unparse(key) if key is not None else "?"
+            if not (isinstance(val, ast.Tuple) and len(val.elts) == 2):
+                yield val.lineno, (
+                    f"storage policy {name} must be a (dtype, bound) "
+                    "pair declaring its validity bound"
+                )
+                continue
+            bound = const_int(val.elts[1], env)
+            if bound is None:
+                yield val.lineno, (
+                    f"storage policy {name}: validity bound must fold to "
+                    "a compile-time integer (plancheck depends on it)"
+                )
+            elif bound <= 0:
+                yield val.lineno, (
+                    f"storage policy {name}: validity bound {bound} "
+                    "must be positive"
+                )
+
+    @staticmethod
+    def _check_storage_class(cls: ast.ClassDef) -> Iterator[tuple[int, str]]:
+        # only HSource subclasses answer queries; plan/spec dataclasses
+        # carry `storage` as metadata and are validated by plancheck.
+        is_hsource = any(
+            (dotted_name(base) or "").split(".")[-1] == "HSource"
+            for base in cls.bases
+        )
+        has_storage = any(
+            isinstance(stmt, ast.AnnAssign)
+            and isinstance(stmt.target, ast.Name)
+            and stmt.target.id == "storage"
+            for stmt in cls.body
+        )
+        if not (is_hsource and has_storage):
+            return
+        has_bound = any(
+            isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and stmt.name == "exact_region_bound"
+            for stmt in cls.body
+        )
+        if not has_bound:
+            yield cls.lineno, (
+                f"class {cls.name} carries a `storage` policy field but "
+                "does not define exact_region_bound() — queries cannot "
+                "enforce the policy's validity bound"
+            )
+
+
+@register
+class LockDisciplineRule(Rule):
+    name = "lock-discipline"
+    pragma = "lock-discipline"
+    description = (
+        "attributes a class lists in _LOCK_PROTECTED may only be "
+        "mutated inside `with self._lock:` (outside __init__) — "
+        "declared mutator methods (_LOCK_PROTECTED_MUTATORS) and "
+        "container mutators count as mutations"
+    )
+
+    def check(self, ctx: FileContext) -> Iterable[tuple[int, str]]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ClassDef):
+                yield from self._check_class(node)
+
+    def _check_class(self, cls: ast.ClassDef) -> Iterator[tuple[int, str]]:
+        protected = self._declared(cls, "_LOCK_PROTECTED")
+        if not protected:
+            return
+        mutators = _MUTATORS | self._declared(cls, "_LOCK_PROTECTED_MUTATORS")
+        for stmt in cls.body:
+            if not isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if stmt.name == "__init__":   # construction precedes sharing
+                continue
+            yield from self._scan(stmt.body, protected, mutators, False)
+
+    @staticmethod
+    def _declared(cls: ast.ClassDef, name: str) -> frozenset:
+        for stmt in cls.body:
+            targets = []
+            if isinstance(stmt, ast.Assign):
+                targets = stmt.targets
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                targets = [stmt.target]
+            for tgt in targets:
+                if isinstance(tgt, ast.Name) and tgt.id == name:
+                    try:
+                        value = ast.literal_eval(stmt.value)
+                    except (ValueError, TypeError):
+                        return frozenset()
+                    return frozenset(
+                        v for v in value if isinstance(v, str)
+                    )
+        return frozenset()
+
+    def _scan(self, body, protected, mutators, locked) -> Iterator:
+        for node in body:
+            if isinstance(node, ast.With):
+                inner = locked or any(
+                    self._is_self_lock(item.context_expr)
+                    for item in node.items
+                )
+                yield from self._scan(node.body, protected, mutators, inner)
+                continue
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                continue            # nested callables judged on their own
+            if not locked:
+                yield from self._check_stmt(node, protected, mutators)
+            # recurse into compound statements preserving lock state
+            for field in ("body", "orelse", "finalbody"):
+                sub = getattr(node, field, None)
+                if sub:
+                    yield from self._scan(sub, protected, mutators, locked)
+            for handler in getattr(node, "handlers", []) or []:
+                yield from self._scan(handler.body, protected, mutators,
+                                      locked)
+
+    def _check_stmt(self, node, protected, mutators) -> Iterator:
+        # only inspect this statement's own expressions, not nested blocks
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for tgt in targets:
+                attr = self._protected_base(tgt, protected)
+                if attr is not None:
+                    yield node.lineno, (
+                        f"`self.{attr}` is declared lock-protected but is "
+                        "written outside `with self._lock:`"
+                    )
+        exprs = []
+        if isinstance(node, ast.Expr):
+            exprs = [node.value]
+        elif isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)) \
+                and node.value is not None:
+            exprs = [node.value]
+        elif isinstance(node, (ast.If, ast.While)):
+            exprs = [node.test]
+        elif isinstance(node, ast.Return) and node.value is not None:
+            exprs = [node.value]
+        for expr in exprs:
+            for call in _walk_calls(expr):
+                if not isinstance(call.func, ast.Attribute):
+                    continue
+                if call.func.attr not in mutators:
+                    continue
+                attr = self._protected_base(call.func.value, protected)
+                if attr is not None:
+                    yield call.lineno, (
+                        f"`self.{attr}.{call.func.attr}(...)` mutates a "
+                        "lock-protected attribute outside "
+                        "`with self._lock:`"
+                    )
+
+    @staticmethod
+    def _protected_base(node: ast.AST, protected) -> str | None:
+        """The protected attr name if `node` roots at self.<protected>."""
+        while isinstance(node, (ast.Attribute, ast.Subscript)):
+            base = node.value
+            if isinstance(node, ast.Attribute) and \
+                    isinstance(base, ast.Name) and base.id == "self" and \
+                    node.attr in protected:
+                return node.attr
+            node = base
+        return None
+
+    @staticmethod
+    def _is_self_lock(expr: ast.AST) -> bool:
+        dn = dotted_name(expr)
+        return dn is not None and dn.endswith("self._lock")

@@ -250,11 +250,18 @@ def banded_integral_histogram(image, num_bins: int, **kwargs) -> jnp.ndarray:
     """Assemble full H from the band stream (parity oracle + the target of
     ``integral_histogram(memory_budget_bytes=...)``'s auto-banding: the
     result still materializes, but the per-dispatch working set — one-hot
-    masks, transposes, scan intermediates — is bounded to a band)."""
-    return jnp.concatenate(
-        [band.H for band in iter_banded_ih(image, num_bins, **kwargs)],
-        axis=-2,
-    )
+    masks, transposes, scan intermediates — is bounded to a band).
+
+    Assembly is host-side (each band pulled with ``np.asarray``, then one
+    ``np.concatenate``): under jax 0.4.37 a device-side concat over bands
+    whose donors live on different devices silently mis-assembles (the
+    hazard core/hsource.py:28 documents and the sharded-concat lint rule
+    enforces)."""
+    pieces = [
+        np.asarray(band.H)
+        for band in iter_banded_ih(image, num_bins, **kwargs)
+    ]
+    return jnp.asarray(np.concatenate(pieces, axis=-2))
 
 
 def reduce_banded_ih(image, num_bins: int, reduce_fn, init=None, **kwargs):

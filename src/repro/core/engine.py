@@ -61,6 +61,11 @@ REPRESENTATIONS = ("dense", "banded", "spilled", "sharded")
 _AUTO_BATCH_BYTES = 4 << 20
 
 
+class PlanValidationError(ValueError):
+    """A plan failed static validation (repro.analysis.plancheck) — the
+    dispatch would have failed or silently produced invalid counts."""
+
+
 def auto_batch_size(num_bins: int, h: int, w: int) -> int:
     """Frames per dispatch from the per-frame (num_bins, h, w) fp32 H
     footprint: ROI-scale frames are dispatch-bound and batch deep, full
@@ -138,8 +143,12 @@ class ExecutionPlan:
     sharding: str | None                # None | "bin" | "spatial"
     microbatch_mode: str = "fixed"      # "fixed" | "adaptive"
 
-    def explain(self) -> str:
-        """Human-readable plan rationale (golden-snapshot tested)."""
+    def explain(self, verdict=None) -> str:
+        """Human-readable plan rationale (golden-snapshot tested).
+
+        ``verdict`` (a ``repro.analysis.plancheck.PlanVerdict``, e.g.
+        ``engine.last_verdict``) appends the static feasibility verdict
+        to the rationale; the default output is unchanged."""
         s = self.spec
         per_frame = s.per_frame_h_bytes
         lines = [
@@ -186,6 +195,8 @@ class ExecutionPlan:
                 f"  sharding        : {self.sharding} over mesh axis "
                 f"{axis!r} ({size} devices)"
             )
+        if verdict is not None:
+            lines.append("  " + verdict.render().replace("\n", "\n  "))
         return "\n".join(lines)
 
 
@@ -505,6 +516,7 @@ class HistogramEngine:
         self.row_axis = row_axis
         self.last_plan: ExecutionPlan | None = None
         self.last_runtime = None        # FrameRuntime from map_frames
+        self.last_verdict = None        # PlanVerdict from validate()
 
     # -- planning -----------------------------------------------------------
     def spec_for(
@@ -539,6 +551,41 @@ class HistogramEngine:
                                getattr(frames, "dtype", "uint8")))
         self.last_plan = p
         return p
+
+    # -- static validation --------------------------------------------------
+    def validate(self, p: ExecutionPlan | None = None, queries=()):
+        """Statically verify a plan (``repro.analysis.plancheck``):
+        H shapes/dtypes by abstract evaluation, the cross-band carry
+        chain, peak memory vs budget, Pallas VMEM fit, and the
+        count-validity bounds for ``queries`` — no dispatch runs.
+
+        Returns the ``PlanVerdict`` (also kept as ``last_verdict``;
+        ``explain()`` surfaces it).  ``run()``/``map_frames()`` call
+        this before their first dispatch and raise
+        ``PlanValidationError`` on a rejected plan."""
+        from repro.analysis.plancheck import check_plan
+
+        if p is None:
+            p = self.last_plan
+        if p is None:
+            raise ValueError("no plan to validate — pass one or run "
+                             "plan_for() first")
+        verdict = check_plan(p, tuple(queries))
+        self.last_verdict = verdict
+        return verdict
+
+    def _validate_or_raise(self, p: ExecutionPlan, queries=()) -> None:
+        verdict = self.validate(p, queries)
+        if not verdict.ok:
+            raise PlanValidationError(
+                "plan rejected by static validation:\n" + verdict.render()
+            )
+
+    def explain(self) -> str:
+        """``last_plan.explain()`` with the ``last_verdict`` appended."""
+        if self.last_plan is None:
+            raise ValueError("no plan yet — run plan_for()/run() first")
+        return self.last_plan.explain(self.last_verdict)
 
     # -- execution ----------------------------------------------------------
     def _kernel_kwargs(self, p: ExecutionPlan) -> dict:
@@ -615,8 +662,9 @@ class HistogramEngine:
         ``rows()`` pass (``prefetch_rows``) instead of re-running the
         banded kernel per query."""
         p = self.plan_for(frames)
-        source = self.compute(frames, p)
         queries = list(queries)
+        self._validate_or_raise(p, queries)
+        source = self.compute(frames, p)
         target = source
         if len(queries) > 1 and isinstance(source, BandedH):
             target = prefetch_rows(source, queries) or source
@@ -670,6 +718,7 @@ class HistogramEngine:
                 f"{p.spec.width}x{p.spec.num_bins}; run each frame "
                 "through engine.run()/compute() instead"
             )
+        self._validate_or_raise(p)
         runtime = self.runtime_for(p, depth=depth, device=device)
         self.last_runtime = runtime
         return runtime.map_frames(itertools.chain([first], frames))

@@ -63,6 +63,7 @@ def stack_chunks(
     (ragged final chunk included)."""
     buf: list = []
     for frame in frames:
+        # analysis: allow-host-sync(host-side frame staging before device dispatch, not a device readback)
         buf.append(np.asarray(frame))
         if len(buf) == batch_size:
             yield np.stack(buf)
@@ -301,6 +302,7 @@ class FrameRuntime:
             k = self._chunk_size()
             while len(buf) < k:
                 try:
+                    # analysis: allow-host-sync(host-side microbatch stacking before staging, not a device readback)
                     buf.append(np.asarray(next(it)))
                 except StopIteration:
                     if buf:
@@ -348,6 +350,7 @@ class FrameRuntime:
         def retire(d):
             out = d.out
             if self.block:
+                # analysis: allow-host-sync(retire-time sync IS the depth-k window contract; dispatch stays async)
                 out = jax.block_until_ready(out)
                 d.latency_s = self.clock() - d._t0
                 stats.latencies_s.append(d.latency_s)

@@ -112,6 +112,13 @@ class AnalyticsService:
       max_coalesce: most requests the worker drains into one batch.
     """
 
+    # Shared mutable state and the methods that mutate it: writes to
+    # these attributes outside `with self._lock:` race the worker thread
+    # against process()/submit() callers (the close()/drain race class).
+    # The lock-discipline lint rule enforces this declaration.
+    _LOCK_PROTECTED = ("_cache", "stats")
+    _LOCK_PROTECTED_MUTATORS = ("observe",)
+
     def __init__(
         self,
         engine,
@@ -195,7 +202,8 @@ class AnalyticsService:
             done = time.perf_counter()
             for (i, p), out in zip(members, outs):
                 results[i] = out
-                self.stats.observe(done - p.t_submit)
+                with self._lock:
+                    self.stats.observe(done - p.t_submit)
                 if p.future is not None:
                     p.future.set_result(out)
         return results
