@@ -10,7 +10,14 @@ Two layers:
   * :mod:`repro.analysis.plancheck` — the static plan validator
     (``jax.eval_shape`` abstract interpretation over an
     ``ExecutionPlan``); imported lazily because it needs jax.
-    ``HistogramEngine.validate(plan)`` is the wired-in entry point.
+    ``HistogramEngine.validate(plan)`` is the wired-in entry point
+    (``deep=True`` folds in the kernel checks below).
+  * :mod:`repro.analysis.kernelcheck` — symbolic-grid verification of
+    the Pallas kernels' declared :class:`~repro.kernels.specs.KernelSpec`
+    contracts (carry happens-before, output coverage, in-bounds index
+    maps, VMEM fit); also lazy — the kernel modules defining the specs
+    import jax.  ``python -m repro.analysis --check-kernels`` is the
+    CLI entry point.
 """
 
 from repro.analysis import rules as rules          # registers the rule set
@@ -26,6 +33,7 @@ from repro.analysis.lint import (
     load_baseline,
     render_json,
     render_text,
+    stale_fingerprints,
     write_baseline,
 )
 
@@ -41,19 +49,36 @@ __all__ = [
     "load_baseline",
     "render_json",
     "render_text",
+    "stale_fingerprints",
     "write_baseline",
     "check_plan",
     "PlanVerdict",
     "PlanCheck",
+    "check_kernels",
+    "check_method",
+    "KernelVerdict",
+    "KernelCheck",
 ]
+
+#: names resolved lazily (they need jax): attr -> providing submodule.
+_LAZY = {
+    "check_plan": "plancheck",
+    "PlanVerdict": "plancheck",
+    "PlanCheck": "plancheck",
+    "plancheck": "plancheck",
+    "check_kernels": "kernelcheck",
+    "check_method": "kernelcheck",
+    "KernelVerdict": "kernelcheck",
+    "KernelCheck": "kernelcheck",
+    "kernelcheck": "kernelcheck",
+}
 
 
 def __getattr__(name):
-    # plancheck needs jax; load it only when asked for.
-    if name in ("check_plan", "PlanVerdict", "PlanCheck", "plancheck"):
-        from repro.analysis import plancheck
+    modname = _LAZY.get(name)
+    if modname is not None:
+        import importlib
 
-        if name == "plancheck":
-            return plancheck
-        return getattr(plancheck, name)
+        mod = importlib.import_module(f"repro.analysis.{modname}")
+        return mod if name == modname else getattr(mod, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -9,6 +9,17 @@ Typical invocations (from the repo root):
     PYTHONPATH=src python -m repro.analysis --check --json report.json
     PYTHONPATH=src python -m repro.analysis --write-baseline
     PYTHONPATH=src python -m repro.analysis --list-rules
+    PYTHONPATH=src python -m repro.analysis --check-kernels
+
+``--check`` also fails on *stale* baseline entries (fingerprints whose
+finding no longer exists): the committed baseline is a ratchet that may
+only shrink, and ``--write-baseline`` prunes it.
+
+``--check-kernels`` runs :mod:`repro.analysis.kernelcheck` — the
+symbolic-grid verification of the Pallas kernels' declared contracts
+(carry happens-before, output coverage, in-bounds index maps, VMEM
+fit).  It is a separate mode because it needs jax (the kernel modules
+define the specs); the lint rules stay importable without it.
 """
 
 from __future__ import annotations
@@ -25,6 +36,7 @@ from repro.analysis.lint import (
     load_baseline,
     render_json,
     render_text,
+    stale_fingerprints,
     write_baseline,
 )
 
@@ -38,6 +50,36 @@ def find_root(start: Path) -> Path:
         if (p / "src" / "repro").is_dir():
             return p
     return start
+
+
+def _run_check_kernels(args) -> int:
+    """The ``--check-kernels`` mode: verify every registered KernelSpec,
+    print the verdicts, optionally write the JSON report; exit 1 on any
+    failed check."""
+    import json
+
+    try:
+        from repro.analysis import kernelcheck
+    except ImportError as e:  # jax not installed: the lint-only env
+        print(f"--check-kernels needs jax (kernel modules define the "
+              f"specs): {e}", file=sys.stderr)
+        return 2
+    verdicts = kernelcheck.check_kernels()
+    for v in verdicts:
+        print(v.render())
+    failed = [v for v in verdicts if not v.ok]
+    print(f"{len(verdicts)} kernel verdict(s), {len(failed)} failed")
+    if args.json:
+        report = json.dumps({
+            "version": 1,
+            "verdicts": [v.to_json() for v in verdicts],
+            "counts": {"total": len(verdicts), "failed": len(failed)},
+        }, indent=2)
+        if args.json == "-":
+            print(report)
+        else:
+            Path(args.json).write_text(report + "\n")
+    return 1 if failed else 0
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -56,7 +98,8 @@ def main(argv: list[str] | None = None) -> int:
     )
     parser.add_argument(
         "--check", action="store_true",
-        help="exit 1 if any non-baselined, non-suppressed finding remains",
+        help="exit 1 if any non-baselined, non-suppressed finding "
+             "remains, or if the baseline holds stale fingerprints",
     )
     parser.add_argument(
         "--json", metavar="FILE", default=None,
@@ -68,18 +111,39 @@ def main(argv: list[str] | None = None) -> int:
     )
     parser.add_argument(
         "--write-baseline", action="store_true",
-        help="record current unsuppressed findings as the new baseline",
+        help="seed the baseline (first write), or prune stale entries "
+             "from it (the baseline only ever shrinks)",
     )
     parser.add_argument(
         "--list-rules", action="store_true",
         help="print the registered rules and exit",
     )
+    parser.add_argument(
+        "--check-kernels", action="store_true",
+        help="verify the Pallas kernel contracts (KernelSpec grid/carry/"
+             "coverage/VMEM proofs; needs jax), exit 1 on any failure",
+    )
     args = parser.parse_args(argv)
+
+    modes = [args.check, args.write_baseline, args.list_rules,
+             args.check_kernels]
+    if sum(bool(m) for m in modes) > 1:
+        print("--check, --write-baseline, --list-rules and "
+              "--check-kernels are mutually exclusive modes",
+              file=sys.stderr)
+        return 2
 
     if args.list_rules:
         for name, rule in sorted(RULES.items()):
             print(f"{name:18s} allow-{rule.pragma:18s} {rule.description}")
         return 0
+
+    if args.check_kernels:
+        if args.paths:
+            print("--check-kernels verifies the registered KernelSpecs; "
+                  "it takes no paths", file=sys.stderr)
+            return 2
+        return _run_check_kernels(args)
 
     root = find_root(Path(args.root or ".").resolve())
     paths = args.paths or [p for p in DEFAULT_PATHS if (root / p).exists()]
@@ -98,16 +162,17 @@ def main(argv: list[str] | None = None) -> int:
 
     baseline = load_baseline(baseline_path)
     gating = gate(findings, baseline)
+    stale = stale_fingerprints(findings, baseline)
 
-    print(render_text(findings, gating, baseline))
+    print(render_text(findings, gating, baseline, stale))
     if args.json:
-        report = render_json(findings, gating, baseline)
+        report = render_json(findings, gating, baseline, stale)
         if args.json == "-":
             print(report)
         else:
             Path(args.json).write_text(report + "\n")
 
-    if args.check and gating:
+    if args.check and (gating or stale):
         return 1
     return 0
 

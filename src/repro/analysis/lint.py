@@ -283,15 +283,36 @@ def load_baseline(path: str | Path) -> set[str]:
 
 
 def write_baseline(findings: Iterable[Finding], path: str | Path) -> int:
-    """Persist the fingerprints of every *unsuppressed* finding; returns
-    how many were written.  Regenerate with
-    ``python -m repro.analysis --write-baseline`` after an intentional
-    change, and commit the file."""
-    fps = sorted({f.fingerprint for f in findings if not f.suppressed})
-    Path(path).write_text(json.dumps(
+    """Persist the baseline; returns how many fingerprints it now holds.
+
+    The baseline is a RATCHET: once a file exists, rewriting it can only
+    *shrink* it (new = old ∩ current unsuppressed findings — fixed debt
+    is pruned, new debt is refused, so ``--write-baseline`` can never
+    launder a fresh violation).  Only when no baseline file exists yet
+    does this seed it with the full current set.  Regenerate with
+    ``python -m repro.analysis --write-baseline`` after fixing baselined
+    debt, and commit the file."""
+    path = Path(path)
+    current = {f.fingerprint for f in findings if not f.suppressed}
+    if path.exists():
+        fps = sorted(load_baseline(path) & current)
+    else:
+        fps = sorted(current)
+    path.write_text(json.dumps(
         {"version": 1, "fingerprints": fps}, indent=2,
     ) + "\n")
     return len(fps)
+
+
+def stale_fingerprints(
+    findings: Iterable[Finding], baseline: set[str]
+) -> set[str]:
+    """Baseline entries no current unsuppressed finding matches — fixed
+    (or vanished) debt still recorded.  ``--check`` fails on these so
+    the committed baseline only ever shrinks (run ``--write-baseline``
+    to prune them)."""
+    current = {f.fingerprint for f in findings if not f.suppressed}
+    return baseline - current
 
 
 def gate(findings: Iterable[Finding], baseline: set[str]) -> list[Finding]:
@@ -306,9 +327,14 @@ def gate(findings: Iterable[Finding], baseline: set[str]) -> list[Finding]:
 # reports
 # ---------------------------------------------------------------------------
 def render_text(
-    findings: list[Finding], gating: list[Finding], baseline: set[str]
+    findings: list[Finding], gating: list[Finding], baseline: set[str],
+    stale: Iterable[str] = (),
 ) -> str:
     lines = [f.render() for f in findings if not f.suppressed]
+    for fp in sorted(stale):
+        lines.append(
+            f"stale baseline entry {fp} — the finding is gone; prune "
+            "with --write-baseline")
     n_sup = sum(f.suppressed for f in findings)
     n_base = sum(
         1 for f in findings
@@ -322,7 +348,8 @@ def render_text(
 
 
 def render_json(
-    findings: list[Finding], gating: list[Finding], baseline: set[str]
+    findings: list[Finding], gating: list[Finding], baseline: set[str],
+    stale: Iterable[str] = (),
 ) -> str:
     return json.dumps({
         "version": 1,
@@ -337,10 +364,12 @@ def render_json(
             f.fingerprint for f in findings
             if not f.suppressed and f.fingerprint in baseline
         ),
+        "stale_baseline": sorted(stale),
         "counts": {
             "total": len(findings),
             "suppressed": sum(f.suppressed for f in findings),
             "gating": len(gating),
+            "stale_baseline": len(set(stale)),
         },
     }, indent=2)
 

@@ -38,7 +38,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import math
 
 import jax
 import numpy as np
@@ -234,31 +233,17 @@ def _check_memory_budget(plan) -> PlanCheck:
 
 
 def _vmem_estimate(plan) -> tuple[int, str] | None:
-    """Estimated per-core VMEM bytes for the plan's Pallas kernel, from
-    its block specs (double-buffered in/out + carry + scratch), or
-    ``None`` for methods without a Pallas kernel model."""
-    s = plan.spec
-    t, bb = plan.tile, plan.bin_block
-    nbb = math.ceil(s.num_bins / bb)
-    w_pad = math.ceil(s.width / t) * t
-    if plan.method == "wf_tis":
-        in_block = t * t                       # (1, tile, tile) image tile
-        carry_block = bb * t                   # (1, bin_block, tile)
-        out_block = bb * t * t                 # (1, bin_block, tile, tile)
-        scratch = nbb * bb * t + nbb * bb * w_pad   # row + col carries
-    elif plan.method == "cw_tis":
-        in_block = t * t
-        carry_block = bb * t
-        out_block = bb * t * t
-        scratch = 2 * bb * t                   # per-pass column scratch
-    else:
-        return None
-    words = 2 * (in_block + out_block) + carry_block + scratch
-    detail = (
-        f"2x({t}x{t} in + {bb}x{t}x{t} out) + {bb}x{t} carry + "
-        f"{scratch} scratch words"
-    )
-    return 4 * words, detail
+    """Per-core VMEM bytes for the plan's Pallas kernel, or ``None`` for
+    methods without one.  Delegates to the kernel's own
+    :class:`~repro.kernels.specs.KernelSpec` via ``kernelcheck`` — ONE
+    model, priced from the same metadata the deep kernel checks verify,
+    instead of the hand-maintained per-method formula this function used
+    to duplicate (which had already drifted: it omitted the
+    double-buffering of the carry operand)."""
+    from repro.analysis import kernelcheck
+
+    return kernelcheck.vmem_required(
+        plan.method, kernelcheck.plan_geometry(plan))
 
 
 def _check_vmem_fit(plan) -> PlanCheck:
@@ -358,6 +343,50 @@ def _check_queries(plan, queries) -> PlanCheck:
 
 
 # ---------------------------------------------------------------------------
+# deep checks: kernelcheck's grid/carry/coverage proofs, as PlanChecks
+# ---------------------------------------------------------------------------
+#: kernelcheck check name -> the PlanCheck name it merges under.
+_KERNEL_CHECK_NAMES = {
+    "carry-order": "kernel-carry",
+    "out-coverage": "kernel-coverage",
+    "in-bounds": "kernel-bounds",
+    "vmem-fit": "kernel-vmem",
+}
+
+
+@functools.lru_cache(maxsize=256)
+def _kernel_checks(plan) -> tuple[PlanCheck, ...]:
+    """The four kernelcheck properties for the plan's Pallas kernel,
+    folded across passes (a multi-pass method fails a property when any
+    pass does).  One skip line when the plan dispatches no Pallas
+    kernel."""
+    from repro.analysis import kernelcheck
+
+    if plan.backend != "pallas":
+        return (PlanCheck(
+            "kernel-checks", "skip",
+            f"{plan.backend} backend dispatches no Pallas kernel"),)
+    geom = kernelcheck.plan_geometry(plan)
+    try:
+        verdict = kernelcheck.check_method(plan.method, geom)
+    except KeyError as e:
+        return (PlanCheck(
+            "kernel-checks", "fail",
+            f"pallas plan without a KernelSpec contract: {e}"),)
+    merged = []
+    for kname, pname in _KERNEL_CHECK_NAMES.items():
+        per_pass = [c for c in verdict.checks if c.name == kname]
+        bad = [c for c in per_pass if not c.ok]
+        if bad:
+            merged.append(PlanCheck(pname, "fail", "; ".join(
+                f"[{c.kernel}] {c.detail}" for c in bad)))
+        else:
+            merged.append(PlanCheck(pname, "ok", "; ".join(
+                f"[{c.kernel}] {c.detail}" for c in per_pass)))
+    return tuple(merged)
+
+
+# ---------------------------------------------------------------------------
 # entry point
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=256)
@@ -372,12 +401,22 @@ def _structural_checks(plan) -> tuple[PlanCheck, ...]:
     )
 
 
-def check_plan(plan, queries=()) -> PlanVerdict:
+def check_plan(plan, queries=(), *, deep: bool = False) -> PlanVerdict:
     """Statically verify a plan (and optionally its queries).
 
-    Structural checks are cached per plan; the query check is cheap
-    arithmetic computed fresh (queries carry unhashable arrays)."""
+    ``deep=True`` additionally runs ``repro.analysis.kernelcheck``'s
+    symbolic-grid proofs (carry happens-before, output coverage,
+    in-bounds index maps, spec-derived VMEM fit) for Pallas plans and
+    merges them into the verdict.  The default stays shallow so
+    ``validate()``'s rendered verdict is unchanged for existing callers;
+    the engine's pre-dispatch gate (``_validate_or_raise``) always runs
+    deep.
+
+    Structural and deep checks are cached per plan; the query check is
+    cheap arithmetic computed fresh (queries carry unhashable arrays)."""
     checks = _structural_checks(plan)
+    if deep:
+        checks = checks + _kernel_checks(plan)
     queries = tuple(queries) if not isinstance(queries, tuple) else queries
     if queries:
         checks = checks + (_check_queries(plan, queries),)

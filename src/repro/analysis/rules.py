@@ -21,6 +21,13 @@ docstring, a one-off test monkeypatch, or a run-time failure:
   * ``lock-discipline``  — attributes a class declares in
     ``_LOCK_PROTECTED`` may only be mutated under ``with self._lock:``
     (the close()/drain race class fixed in PR 5).
+  * ``lock-order``       — per class, the lock-acquisition graph
+    (nested ``with self.<lock>:`` blocks plus ``self.method()`` calls
+    made while holding a lock, followed into the callee) must be
+    acyclic, non-reentrant locks must not be re-acquired, and no
+    blocking call (``.join()``, ``.result()``, blocking queue
+    get/put, ``time.sleep``, or future completion — inline done
+    callbacks) may run under a held lock.
 
 Suppress a deliberate exception with
 ``# analysis: allow-<rule>(reason)`` on (or directly above) the line.
@@ -478,3 +485,256 @@ class LockDisciplineRule(Rule):
     def _is_self_lock(expr: ast.AST) -> bool:
         dn = dotted_name(expr)
         return dn is not None and dn.endswith("self._lock")
+
+
+# lock-constructor callables recognized by the lock-order rule; RLock is
+# reentrant (re-acquisition is legal), the rest are not.
+_LOCK_FACTORIES = {
+    "threading.Lock": "lock",
+    "threading.RLock": "rlock",
+    "threading.Condition": "condition",
+    "Lock": "lock",
+    "RLock": "rlock",
+    "Condition": "condition",
+}
+
+# attribute calls that block the calling thread outright
+_BLOCKING_ATTRS = frozenset({"join", "result"})
+# completing a future runs its done-callbacks inline on this thread —
+# arbitrary foreign code under a held lock
+_FUTURE_COMPLETERS = frozenset({"set_result", "set_exception"})
+# queue methods that can block (get_nowait/put_nowait cannot)
+_QUEUE_BLOCKERS = frozenset({"get", "put"})
+
+
+@register
+class LockOrderRule(Rule):
+    name = "lock-order"
+    pragma = "lock-order"
+    description = (
+        "per class: the lock-acquisition graph (nested `with self.X:` "
+        "plus self.method() calls made while holding a lock, followed "
+        "into the callee) must be acyclic; non-reentrant locks must not "
+        "be re-acquired; no blocking call (.join/.result/blocking queue "
+        "get/put/time.sleep/future completion) under a held lock"
+    )
+
+    def check(self, ctx: FileContext) -> Iterable[tuple[int, str]]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ClassDef):
+                yield from self._check_class(node)
+
+    # -- per-class analysis --------------------------------------------------
+    def _check_class(self, cls: ast.ClassDef) -> Iterator[tuple[int, str]]:
+        locks = self._lock_attrs(cls)
+        if not locks:
+            return
+        methods = {
+            stmt.name: stmt for stmt in cls.body
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        info = {
+            name: self._scan_method(fn, locks)
+            for name, fn in methods.items()
+        }
+
+        # Fixpoint closures: every lock a method may acquire and every
+        # blocking call it may make, following self.method() calls.
+        acq = {m: {a for a, _, _ in info[m]["acquires"]} for m in info}
+        blk = {m: {d for d, _, _ in info[m]["blocks"]} for m in info}
+        changed = True
+        while changed:
+            changed = False
+            for m in info:
+                for callee, _, _ in info[m]["calls"]:
+                    if callee not in info:
+                        continue
+                    if not acq[callee] <= acq[m]:
+                        acq[m] |= acq[callee]
+                        changed = True
+                    if not blk[callee] <= blk[m]:
+                        blk[m] |= blk[callee]
+                        changed = True
+
+        # edge (a, b): b acquired while a held; remember one witness site
+        edges: dict[tuple[str, str], tuple[int, str]] = {}
+        for m in info:
+            for lock, line, held in info[m]["acquires"]:
+                for h in held:
+                    if h == lock:
+                        if locks[lock] != "rlock":
+                            yield line, (
+                                f"`{m}` re-acquires non-reentrant "
+                                f"`self.{lock}` it already holds — "
+                                "threading.Lock self-deadlocks"
+                            )
+                    else:
+                        edges.setdefault((h, lock), (line, m))
+            for callee, line, held in info[m]["calls"]:
+                if not held or callee not in info:
+                    continue
+                for lock in acq[callee]:
+                    for h in held:
+                        if h == lock:
+                            if locks[lock] != "rlock":
+                                yield line, (
+                                    f"`{m}` holds `self.{lock}` and calls "
+                                    f"`self.{callee}()`, which acquires it "
+                                    "again — threading.Lock self-deadlocks"
+                                )
+                        else:
+                            edges.setdefault((h, lock), (line, m))
+                for desc in blk[callee]:
+                    yield line, (
+                        f"`{m}` holds {self._held_str(held)} and calls "
+                        f"`self.{callee}()`, which blocks ({desc}) — the "
+                        "lock is held across the wait"
+                    )
+            for desc, line, held in info[m]["blocks"]:
+                if held:
+                    yield line, (
+                        f"`{m}` blocks ({desc}) while holding "
+                        f"{self._held_str(held)} — every other thread "
+                        "needing the lock stalls behind the wait"
+                    )
+
+        yield from self._cycles(edges)
+
+    @staticmethod
+    def _held_str(held) -> str:
+        return " + ".join(f"`self.{h}`" for h in held)
+
+    def _cycles(self, edges) -> Iterator[tuple[int, str]]:
+        graph: dict[str, list[str]] = {}
+        for a, b in edges:
+            graph.setdefault(a, []).append(b)
+        reported: set[frozenset] = set()
+        for start in sorted(graph):
+            path: list[str] = []
+
+            def dfs(node):
+                if node in path:
+                    cycle = path[path.index(node):] + [node]
+                    key = frozenset(cycle)
+                    if key not in reported:
+                        reported.add(key)
+                        line, meth = edges[(cycle[0], cycle[1])]
+                        yield line, (
+                            "lock-order cycle "
+                            + " -> ".join(f"self.{c}" for c in cycle)
+                            + f" (one edge acquired in `{meth}`) — two "
+                            "threads taking the locks in opposite order "
+                            "deadlock"
+                        )
+                    return
+                path.append(node)
+                for nxt in graph.get(node, ()):
+                    yield from dfs(nxt)
+                path.pop()
+
+            yield from dfs(start)
+
+    # -- method scan ---------------------------------------------------------
+    @staticmethod
+    def _lock_attrs(cls: ast.ClassDef) -> dict[str, str]:
+        """``self.<attr>`` assignments whose value is a lock constructor
+        call, anywhere in the class body: attr -> kind."""
+        locks: dict[str, str] = {}
+        for node in ast.walk(cls):
+            if not isinstance(node, ast.Assign):
+                continue
+            if not isinstance(node.value, ast.Call):
+                continue
+            kind = _LOCK_FACTORIES.get(dotted_name(node.value.func) or "")
+            if kind is None:
+                continue
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Attribute) and \
+                        isinstance(tgt.value, ast.Name) and \
+                        tgt.value.id == "self":
+                    locks[tgt.attr] = kind
+        return locks
+
+    def _scan_method(self, fn, locks) -> dict:
+        out: dict = {"acquires": [], "calls": [], "blocks": []}
+        self._scan_body(fn.body, locks, (), out)
+        return out
+
+    def _scan_body(self, body, locks, held, out) -> None:
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue            # nested callables judged on their own
+            if isinstance(node, ast.With):
+                new_held = held
+                for item in node.items:
+                    attr = self._self_lock_attr(item.context_expr, locks)
+                    if attr is not None:
+                        out["acquires"].append((attr, node.lineno, new_held))
+                        new_held = new_held + (attr,)
+                    else:
+                        self._scan_exprs([item.context_expr], locks,
+                                         held, out)
+                self._scan_body(node.body, locks, new_held, out)
+                continue
+            # this statement's own expressions (not nested blocks)
+            self._scan_exprs(self._stmt_exprs(node), locks, held, out)
+            for field in ("body", "orelse", "finalbody"):
+                sub = getattr(node, field, None)
+                if sub:
+                    self._scan_body(sub, locks, held, out)
+            for handler in getattr(node, "handlers", []) or []:
+                self._scan_body(handler.body, locks, held, out)
+
+    @staticmethod
+    def _stmt_exprs(node) -> list:
+        exprs = []
+        for field, value in ast.iter_fields(node):
+            if field in ("body", "orelse", "finalbody", "handlers"):
+                continue
+            if isinstance(value, ast.expr):
+                exprs.append(value)
+            elif isinstance(value, list):
+                exprs.extend(v for v in value if isinstance(v, ast.expr))
+        return exprs
+
+    def _scan_exprs(self, exprs, locks, held, out) -> None:
+        for expr in exprs:
+            for call in _walk_calls(expr):
+                if not isinstance(call.func, ast.Attribute):
+                    if dotted_name(call.func) == "time.sleep":
+                        out["blocks"].append(
+                            ("time.sleep(...)", call.lineno, held))
+                    continue
+                attr = call.func.attr
+                base = dotted_name(call.func.value) or ""
+                if base == "self" and attr not in locks:
+                    out["calls"].append((attr, call.lineno, held))
+                    continue
+                if dotted_name(call.func) == "time.sleep":
+                    out["blocks"].append(
+                        ("time.sleep(...)", call.lineno, held))
+                elif attr in _BLOCKING_ATTRS:
+                    out["blocks"].append(
+                        (f"{base or '...'}.{attr}()", call.lineno, held))
+                elif attr in _FUTURE_COMPLETERS:
+                    out["blocks"].append(
+                        (f"{base or '...'}.{attr}() runs done-callbacks "
+                         "inline", call.lineno, held))
+                elif attr in _QUEUE_BLOCKERS and self._queue_like(base):
+                    out["blocks"].append(
+                        (f"{base}.{attr}() can block on the queue",
+                         call.lineno, held))
+
+    @staticmethod
+    def _queue_like(base: str) -> bool:
+        leaf = base.split(".")[-1].lower()
+        return "queue" in leaf or leaf.endswith("_q")
+
+    @staticmethod
+    def _self_lock_attr(expr: ast.AST, locks) -> str | None:
+        """`self.<lock attr>` in a with-item, else None."""
+        if isinstance(expr, ast.Attribute) and \
+                isinstance(expr.value, ast.Name) and \
+                expr.value.id == "self" and expr.attr in locks:
+            return expr.attr
+        return None

@@ -553,15 +553,23 @@ class HistogramEngine:
         return p
 
     # -- static validation --------------------------------------------------
-    def validate(self, p: ExecutionPlan | None = None, queries=()):
+    def validate(self, p: ExecutionPlan | None = None, queries=(),
+                 *, deep: bool = False):
         """Statically verify a plan (``repro.analysis.plancheck``):
         H shapes/dtypes by abstract evaluation, the cross-band carry
         chain, peak memory vs budget, Pallas VMEM fit, and the
         count-validity bounds for ``queries`` — no dispatch runs.
 
+        ``deep=True`` additionally proves the Pallas kernel contracts
+        (``repro.analysis.kernelcheck``: carry happens-before under the
+        declared grid order, exactly-once output coverage, in-bounds
+        index maps, spec-derived VMEM fit) and merges them into the
+        verdict; shallow is the default so existing rendered verdicts
+        are unchanged.
+
         Returns the ``PlanVerdict`` (also kept as ``last_verdict``;
         ``explain()`` surfaces it).  ``run()``/``map_frames()`` call
-        this before their first dispatch and raise
+        this with ``deep=True`` before their first dispatch and raise
         ``PlanValidationError`` on a rejected plan."""
         from repro.analysis.plancheck import check_plan
 
@@ -570,12 +578,12 @@ class HistogramEngine:
         if p is None:
             raise ValueError("no plan to validate — pass one or run "
                              "plan_for() first")
-        verdict = check_plan(p, tuple(queries))
+        verdict = check_plan(p, tuple(queries), deep=deep)
         self.last_verdict = verdict
         return verdict
 
     def _validate_or_raise(self, p: ExecutionPlan, queries=()) -> None:
-        verdict = self.validate(p, queries)
+        verdict = self.validate(p, queries, deep=True)
         if not verdict.ok:
             raise PlanValidationError(
                 "plan rejected by static validation:\n" + verdict.render()

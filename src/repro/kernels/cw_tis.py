@@ -31,7 +31,74 @@ try:
 except ImportError:  # pragma: no cover
     pltpu = None
 
+from repro.kernels.specs import KernelGeometry, KernelSpec, Operand, Scratch
 from repro.kernels.wf_tis import _col_scan_mxu, _row_scan_mxu
+
+
+def kernel_specs(geom: KernelGeometry) -> tuple[KernelSpec, ...]:
+    """The declarative contracts of ``cw_tis_pallas``'s TWO
+    ``pallas_call``s (verified by ``repro.analysis.kernelcheck``; a
+    conformance test pins them against the live calls below).
+
+    Pass 1 sweeps column tiles innermost (grid ``(f, bb, ih, iw)``), so
+    the single row-carry scratch is always one step stale — its producer
+    is exactly the previous grid step.  Pass 2 DELIBERATELY swaps the
+    spatial dims (grid ``(f, bb, iw, ih)``, row tiles innermost): the
+    column carry now chains down a vertical strip, and that order is a
+    declared contract the verifier must *prove*, not assume row-major —
+    re-declaring pass 2 with pass 1's order is the grid-reordering bug
+    class kernelcheck exists to catch (its happens-before check fails:
+    the last write to the shared scratch before ``(iw, ih)`` would come
+    from ``(iw-1, nth-1)``, not the declared producer ``(iw, ih-1)``).
+    """
+    n, nth, ntw, nbb = geom.n, geom.nth, geom.ntw, geom.nbb
+    t, bb_blk = geom.tile, geom.bin_block
+    hp, wp, nbp = geom.h_pad, geom.w_pad, geom.nb_pad
+
+    def h_reads(g):
+        if g["iw"] > 0:
+            return [(("rc",), {**g, "iw": g["iw"] - 1})]
+        return []
+
+    def v_reads(g):
+        if g["ih"] > 0:
+            return [(("cc",), {**g, "ih": g["ih"] - 1})]
+        return []
+
+    return (
+        KernelSpec(
+            name="cw_tis/hscan",
+            grid=(("f", n), ("bb", nbb), ("ih", nth), ("iw", ntw)),
+            in_specs=(
+                Operand("idx", (n, hp, wp), (1, t, t),
+                        lambda f, bb, ih, iw: (f, ih, iw), dtype="int32"),
+            ),
+            out_specs=(
+                Operand("hh", (n, nbp, hp, wp), (1, bb_blk, t, t),
+                        lambda f, bb, ih, iw: (f, bb, ih, iw)),
+            ),
+            scratch=(Scratch("row_carry", (bb_blk, t)),),
+            carry_reads=h_reads,
+            carry_writes=lambda g: [("rc",)],
+        ),
+        KernelSpec(
+            name="cw_tis/vscan",
+            grid=(("f", n), ("bb", nbb), ("iw", ntw), ("ih", nth)),
+            in_specs=(
+                Operand("hh", (n, nbp, hp, wp), (1, bb_blk, t, t),
+                        lambda f, bb, iw, ih: (f, bb, ih, iw)),
+                Operand("carry", (n, nbp, wp), (1, bb_blk, t),
+                        lambda f, bb, iw, ih: (f, bb, iw)),
+            ),
+            out_specs=(
+                Operand("out", (n, nbp, hp, wp), (1, bb_blk, t, t),
+                        lambda f, bb, iw, ih: (f, bb, ih, iw)),
+            ),
+            scratch=(Scratch("col_carry", (bb_blk, t)),),
+            carry_reads=v_reads,
+            carry_writes=lambda g: [("cc",)],
+        ),
+    )
 
 
 def _hscan_kernel(idx_ref, out_ref, row_carry, *, bin_block, use_mxu):

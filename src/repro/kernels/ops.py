@@ -46,10 +46,20 @@ import jax.numpy as jnp
 
 from repro.core import scans
 from repro.core.binning import PAD_BIN, bin_indices
+from repro.kernels import cw_tis, wf_tis
 from repro.kernels.cw_tis import cw_tis_pallas
 from repro.kernels.wf_tis import wf_tis_pallas
 
 PALLAS_METHODS = {"cw_tis": cw_tis_pallas, "wf_tis": wf_tis_pallas}
+
+# method -> kernel_specs(geom) builder: the declarative contracts
+# repro.analysis.kernelcheck verifies (grid order, carry happens-before,
+# output coverage, in-bounds index maps, VMEM fit).  Every PALLAS_METHODS
+# entry must have one — asserted by the kernelcheck conformance tests.
+KERNEL_SPECS = {
+    "cw_tis": cw_tis.kernel_specs,
+    "wf_tis": wf_tis.kernel_specs,
+}
 
 
 def _pad_to(x: jnp.ndarray, mult_h: int, mult_w: int, fill) -> jnp.ndarray:

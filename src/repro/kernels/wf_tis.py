@@ -45,6 +45,63 @@ try:  # TPU-specific pallas helpers; interpret mode works without a TPU.
 except ImportError:  # pragma: no cover
     pltpu = None
 
+from repro.kernels.specs import KernelGeometry, KernelSpec, Operand, Scratch
+
+
+def kernel_specs(geom: KernelGeometry) -> tuple[KernelSpec, ...]:
+    """The declarative contract of ``wf_tis_pallas``'s one ``pallas_call``
+    (verified by ``repro.analysis.kernelcheck``; a conformance test pins
+    it against the live call below).
+
+    Grid ``(f, ih, iw, bb)`` with bins innermost — the raster walk whose
+    sequential order IS the wavefront: the row carry produced at
+    ``(ih, iw-1)`` and the column carry produced at ``(ih-1, iw)`` are
+    both earlier steps.  The carry edges restate the kernel's reset
+    predicates: ``iw == 0`` consumes no row carry, ``ih == 0`` consumes
+    the band carry-in operand instead of the column scratch — which is
+    also why frame boundaries need no extra state (the raster restart
+    fires both predicates).
+    """
+    n, nth, ntw, nbb = geom.n, geom.nth, geom.ntw, geom.nbb
+    t, bb_blk = geom.tile, geom.bin_block
+    hp, wp, nbp = geom.h_pad, geom.w_pad, geom.nb_pad
+
+    def reads(g):
+        edges = []
+        if g["iw"] > 0:     # row carry from the tile to the left
+            edges.append(
+                (("row", g["bb"]), {**g, "iw": g["iw"] - 1}))
+        if g["ih"] > 0:     # column carry from the strip above
+            edges.append(
+                (("col", g["bb"], g["iw"]), {**g, "ih": g["ih"] - 1}))
+        return edges
+
+    def writes(g):
+        return [("row", g["bb"]), ("col", g["bb"], g["iw"])]
+
+    return (
+        KernelSpec(
+            name="wf_tis",
+            grid=(("f", n), ("ih", nth), ("iw", ntw), ("bb", nbb)),
+            in_specs=(
+                Operand("idx", (n, hp, wp), (1, t, t),
+                        lambda f, ih, iw, bb: (f, ih, iw), dtype="int32"),
+                Operand("carry", (n, nbp, wp), (1, bb_blk, t),
+                        lambda f, ih, iw, bb: (f, bb, iw)),
+            ),
+            out_specs=(
+                Operand("out", (n, nbp, hp, wp), (1, bb_blk, t, t),
+                        lambda f, ih, iw, bb: (f, bb, ih, iw)),
+            ),
+            scratch=(
+                Scratch("row_carry", (nbb, bb_blk, t)),
+                Scratch("col_carry", (nbb, bb_blk, wp)),
+            ),
+            carry_reads=reads,
+            carry_writes=writes,
+        ),
+    )
+
 
 def _triu_ones(n: int, dtype=jnp.float32):
     r = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)

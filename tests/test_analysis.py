@@ -331,6 +331,152 @@ def test_lock_discipline_clean_and_suppressed():
 
 
 # ---------------------------------------------------------------------------
+# rule: lock-order
+# ---------------------------------------------------------------------------
+SVC = "src/repro/serve/service.py"
+
+
+def _lock_order(src: str):
+    return _lint(src, SVC, "lock-order")
+
+
+def test_lock_order_flags_acquisition_cycle():
+    bad = """\
+        import threading
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._cache_lock = threading.Lock()
+            def a(self):
+                with self._lock:
+                    with self._cache_lock:
+                        pass
+            def b(self):
+                with self._cache_lock:
+                    with self._lock:
+                        pass
+    """
+    hits = _lock_order(bad)
+    assert len(hits) == 1 and "lock-order cycle" in hits[0].message
+
+
+def test_lock_order_flags_reacquisition_direct_and_via_call():
+    direct = """\
+        import threading
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+            def a(self):
+                with self._lock:
+                    with self._lock:
+                        pass
+    """
+    hits = _lock_order(direct)
+    assert len(hits) == 1 and "self-deadlock" in hits[0].message
+    via_call = """\
+        import threading
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+            def close(self):
+                with self._lock:
+                    self.flush()
+            def flush(self):
+                with self._lock:
+                    pass
+    """
+    hits = _lock_order(via_call)
+    assert len(hits) == 1
+    assert "calls `self.flush()`, which acquires it again" \
+        in hits[0].message
+    # an RLock is reentrant: the same shape is legal
+    rlock = via_call.replace("threading.Lock()", "threading.RLock()")
+    assert _lock_order(rlock) == []
+
+
+def test_lock_order_flags_blocking_under_lock():
+    joins = """\
+        import threading
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._worker = threading.Thread()
+            def close(self):
+                with self._lock:
+                    self._worker.join()
+    """
+    hits = _lock_order(joins)
+    assert len(hits) == 1 and "join" in hits[0].message
+    future_under_lock = """\
+        import threading
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+            def done(self, fut, out):
+                with self._lock:
+                    fut.set_result(out)
+    """
+    hits = _lock_order(future_under_lock)
+    assert len(hits) == 1 and "done-callbacks" in hits[0].message
+    # the blocking call may hide behind a self.method() hop
+    via_callee = """\
+        import threading
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._queue = None
+            def drain(self):
+                with self._lock:
+                    self.take()
+            def take(self):
+                return self._queue.get(timeout=1)
+    """
+    hits = _lock_order(via_callee)
+    assert len(hits) == 1 and "which blocks" in hits[0].message
+
+
+def test_lock_order_clean_and_suppressed():
+    # the shipped service's shape: lock only around state, blocking
+    # calls (join / queue.get / set_result) all outside the lock
+    ok = """\
+        import threading
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._queue = None
+                self._worker = None
+            def submit(self, p):
+                self._queue.put(p, block=True)
+                with self._lock:
+                    self.n = 1
+            def close(self):
+                self._worker.join()
+                p = self._queue.get_nowait()
+                p.future.set_result(None)
+    """
+    assert _lock_order(ok) == []
+    sup = """\
+        import threading
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._worker = threading.Thread()
+            def close(self):
+                with self._lock:
+                    # analysis: allow-lock-order(worker never takes this lock)
+                    self._worker.join()
+    """
+    found = _lint(sup, SVC, "lock-order")
+    assert len(found) == 1 and found[0].suppressed
+    # classes without locks are out of scope
+    assert _lock_order("""\
+        class Free:
+            def f(self):
+                self._worker.join()
+    """) == []
+
+
+# ---------------------------------------------------------------------------
 # pragmas, baseline, CLI
 # ---------------------------------------------------------------------------
 def test_bad_pragmas_are_reported_and_do_not_suppress():
@@ -388,6 +534,126 @@ def test_cli_check_exit_codes(tmp_path, capsys):
     data = json.loads(report.read_text())
     assert data["counts"]["gating"] == 0 and data["counts"]["total"] == 1
     assert set(data["rules"]) == set(RULES)
+    capsys.readouterr()
+
+
+BAD_CONCAT = """\
+import jax.numpy as jnp
+def dense(p):
+    return jnp.concatenate(p)
+"""
+
+
+def test_write_baseline_is_a_ratchet(tmp_path):
+    """Once a baseline exists, rewriting it can only prune: fixed debt
+    drops out, NEW findings are refused (never laundered in)."""
+    old = lint_source(BAD_CONCAT, f"{CORE}/hsource.py")
+    path = tmp_path / "baseline.json"
+    assert write_baseline(old, path) == 1          # seed: full write
+    seeded = load_baseline(path)
+    # the old finding is fixed; a new one appears elsewhere
+    new = lint_source(BAD_CONCAT, f"{CORE}/bands.py")
+    assert write_baseline(new, path) == 0          # old∩current = {}
+    assert load_baseline(path) == set()
+    assert seeded != set()
+    # the new finding still gates — it was not written into the baseline
+    assert gate(new, load_baseline(path)) == new
+
+
+def test_stale_fingerprints_detects_fixed_debt():
+    from repro.analysis import stale_fingerprints
+
+    findings = lint_source(BAD_CONCAT, f"{CORE}/hsource.py")
+    live = {f.fingerprint for f in findings}
+    baseline = live | {"sharded-concat:src/repro/core/gone.py:abc123def456"}
+    assert stale_fingerprints(findings, baseline) == baseline - live
+    assert stale_fingerprints(findings, live) == set()
+
+
+def _seed_repo(tmp_path) -> Path:
+    pkg = tmp_path / "src" / "repro" / "core"
+    pkg.mkdir(parents=True)
+    (pkg / "hsource.py").write_text(BAD_CONCAT)
+    return pkg / "hsource.py"
+
+
+def test_cli_check_fails_on_stale_baseline(tmp_path, capsys):
+    """The committed baseline may only shrink: once debt is fixed,
+    --check forces the prune."""
+    bad_file = _seed_repo(tmp_path)
+    root = str(tmp_path)
+    assert analysis_main(["--write-baseline", "--root", root]) == 0
+    assert analysis_main(["--check", "--root", root]) == 0
+    bad_file.write_text("def dense(p):\n    return p\n")   # debt fixed
+    report = tmp_path / "report.json"
+    assert analysis_main(["--check", "--root", root,
+                          "--json", str(report)]) == 1
+    out = capsys.readouterr().out
+    assert "stale baseline entry" in out and "--write-baseline" in out
+    data = json.loads(report.read_text())
+    assert data["counts"]["stale_baseline"] == 1
+    assert data["counts"]["gating"] == 0
+    assert len(data["stale_baseline"]) == 1
+    # pruning restores a clean --check, and the baseline shrank to empty
+    assert analysis_main(["--write-baseline", "--root", root]) == 0
+    assert analysis_main(["--check", "--root", root]) == 0
+    assert load_baseline(tmp_path / "analysis-baseline.json") == set()
+    capsys.readouterr()
+
+
+def test_cli_usage_errors_exit_2(tmp_path, capsys):
+    # conflicting modes
+    assert analysis_main(["--check", "--write-baseline"]) == 2
+    assert analysis_main(["--list-rules", "--check"]) == 2
+    # no lintable paths under the given root
+    assert analysis_main(["--check", "--root", str(tmp_path)]) == 2
+    capsys.readouterr()
+
+
+def test_cli_json_schema_roundtrip(tmp_path, capsys):
+    """The JSON artifact carries everything the text render shows, keyed
+    so CI tooling can diff runs: findings with fingerprints, the gating
+    and stale sets, per-rule metadata."""
+    _seed_repo(tmp_path)
+    report = tmp_path / "report.json"
+    assert analysis_main(["--root", str(tmp_path),
+                          "--json", str(report)]) == 0
+    data = json.loads(report.read_text())
+    assert data["version"] == 1
+    assert set(data["rules"]) == set(RULES)
+    for meta in data["rules"].values():
+        assert meta["pragma"].startswith("allow-") and meta["description"]
+    (finding,) = data["findings"]
+    assert finding["rule"] == "sharded-concat"
+    assert finding["fingerprint"].startswith(
+        "sharded-concat:src/repro/core/hsource.py:")
+    assert data["gating"] == [finding["fingerprint"]]
+    assert data["stale_baseline"] == []
+    assert data["counts"] == {
+        "total": 1, "suppressed": 0, "gating": 1, "stale_baseline": 0}
+    capsys.readouterr()
+
+
+def test_cli_pragma_suppression_end_to_end(tmp_path, capsys):
+    """A pragma with a reason suppresses through the CLI; --check passes
+    and the report records the suppression."""
+    pkg = tmp_path / "src" / "repro" / "core"
+    pkg.mkdir(parents=True)
+    (pkg / "hsource.py").write_text(textwrap.dedent("""\
+        import jax.numpy as jnp
+        def dense(p):
+            # analysis: allow-sharded-concat(single-device fast path)
+            return jnp.concatenate(p)
+    """))
+    report = tmp_path / "report.json"
+    assert analysis_main(["--check", "--root", str(tmp_path),
+                          "--json", str(report)]) == 0
+    data = json.loads(report.read_text())
+    (finding,) = data["findings"]
+    assert finding["suppressed"] is True
+    assert finding["suppression_reason"] == "single-device fast path"
+    assert data["counts"] == {
+        "total": 1, "suppressed": 1, "gating": 0, "stale_baseline": 0}
     capsys.readouterr()
 
 

@@ -1,0 +1,355 @@
+"""kernelcheck: the Pallas kernels' grid/carry/VMEM contracts.
+
+Three layers of assurance:
+
+  * the verifier PROVES all four properties (carry happens-before,
+    exactly-once output coverage, in-bounds index maps, VMEM fit) for
+    every shipped kernel pass — wf_tis and both cw_tis passes — at even
+    and uneven geometries;
+  * each check CATCHES its seeded violation class (reordered grid dims,
+    overlapping out index map, off-by-one block index, oversized
+    scratch) — a verifier that cannot fail proves nothing;
+  * the declared KernelSpec CANNOT DRIFT from the live ``pallas_call``:
+    a conformance test captures the real call's grid/BlockSpecs/scratch
+    and compares them field by field (index maps at every grid point),
+    while the same run checks numeric parity against the jnp oracle in
+    interpret mode at uneven shapes.
+
+Plus the wiring: plancheck's vmem-fit delegates to the same spec-derived
+number, and ``HistogramEngine.validate(deep=True)`` rejects a pallas
+plan whose spec fails.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.analysis import kernelcheck as kc
+from repro.analysis.__main__ import main as analysis_main
+from repro.kernels import ops
+from repro.kernels.specs import KernelGeometry, Scratch
+
+CHECK_NAMES = ("carry-order", "out-coverage", "in-bounds", "vmem-fit")
+
+GEOMS = {
+    "640x480": KernelGeometry(n=2, h=480, w=640, num_bins=32),
+    "uneven": KernelGeometry(n=3, h=300, w=500, num_bins=20),
+    "paper-8k": KernelGeometry(n=1, h=8192, w=8192, num_bins=128),
+}
+
+#: small interpret-runnable geometry with nth != ntw and padding on
+#: every axis (h 20 -> 24, w uneven, bins exact).
+SMALL = KernelGeometry(n=2, h=20, w=24, num_bins=8, tile=8, bin_block=4)
+
+
+@pytest.fixture
+def fresh_caches():
+    """Tests that monkeypatch KERNEL_SPECS must not leave poisoned
+    verdicts in the lru caches (keyed only by method+geometry/plan)."""
+    from repro.analysis import plancheck
+
+    kc.check_method.cache_clear()
+    plancheck._kernel_checks.cache_clear()
+    yield
+    kc.check_method.cache_clear()
+    plancheck._kernel_checks.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# the four properties hold for every shipped kernel pass
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("geom", GEOMS.values(), ids=GEOMS.keys())
+@pytest.mark.parametrize("method", sorted(ops.KERNEL_SPECS))
+def test_all_four_properties_prove(method, geom):
+    verdict = kc.check_method(method, geom)
+    assert verdict.ok, verdict.render()
+    passes = ops.KERNEL_SPECS[method](geom)
+    # every pass gets all four checks, all ok
+    assert len(verdict.checks) == 4 * len(passes)
+    for spec in passes:
+        names = [c.name for c in verdict.checks if c.kernel == spec.name]
+        assert names == list(CHECK_NAMES)
+    assert all(c.status == "ok" for c in verdict.checks)
+
+
+def test_cw_tis_declares_both_passes_with_swapped_grids():
+    """The vscan contract IS the deliberate ntw/nth swap — the verifier
+    proves that order rather than assuming pass 1's."""
+    hscan, vscan = ops.KERNEL_SPECS["cw_tis"](GEOMS["640x480"])
+    assert hscan.dim_names == ("f", "bb", "ih", "iw")
+    assert vscan.dim_names == ("f", "bb", "iw", "ih")
+
+
+def test_every_pallas_method_has_a_spec():
+    assert set(ops.KERNEL_SPECS) == set(ops.PALLAS_METHODS)
+
+
+def test_canonical_geometry_clamps_and_floors():
+    g = GEOMS["paper-8k"].canonical()
+    assert (g.n, g.nth, g.ntw, g.nbb) == (2, 3, 3, 3)
+    # a single-tile geometry is not inflated, but frames floor at 2
+    tiny = KernelGeometry(n=1, h=100, w=100, num_bins=4).canonical()
+    assert (tiny.n, tiny.nth, tiny.ntw, tiny.nbb) == (2, 1, 1, 1)
+
+
+# ---------------------------------------------------------------------------
+# each check catches its seeded violation
+# ---------------------------------------------------------------------------
+def _vscan():
+    """The cw_tis vertical pass at the canonical small geometry — the
+    richest spec (two inputs, single shared scratch cell)."""
+    return ops.KERNEL_SPECS["cw_tis"](GEOMS["640x480"].canonical())[1]
+
+
+def test_reordered_grid_dims_fail_carry_order():
+    """Re-declaring vscan with hscan's (ih, iw) order: the shared
+    column-carry cell's last writer is no longer the declared producer
+    (it was overwritten by the interleaved strips) — the exact bug class
+    'written earlier' would miss."""
+    spec = _vscan()
+    sizes = dict(spec.grid)
+    bad = dataclasses.replace(spec, grid=(
+        ("f", sizes["f"]), ("bb", sizes["bb"]),
+        ("ih", sizes["ih"]), ("iw", sizes["iw"]),
+    ))
+    check = kc.check_carry_order(bad)
+    assert check.status == "fail"
+    assert "last write under this grid order" in check.detail
+    # the declared order proves clean
+    assert kc.check_carry_order(spec).status == "ok"
+
+
+def test_unwritten_carry_cell_fails_carry_order():
+    spec = _vscan()
+    bad = dataclasses.replace(spec, carry_writes=lambda g: [])
+    check = kc.check_carry_order(bad)
+    assert check.status == "fail"
+    assert "before any write" in check.detail
+
+
+def test_overlapping_out_map_fails_coverage():
+    """An out map that drops the bin-block index writes each spatial
+    block once per bin block — a write race (and a gap elsewhere)."""
+    spec = _vscan()
+    op = spec.out_specs[0]
+    bad_op = dataclasses.replace(
+        op, index_map=lambda f, bb, iw, ih: (f, 0, ih, iw))
+    check = kc.check_out_coverage(
+        dataclasses.replace(spec, out_specs=(bad_op,)))
+    assert check.status == "fail"
+    assert "more than once" in check.detail
+    assert "never written" in check.detail
+
+
+def test_off_by_one_block_index_fails_bounds():
+    spec = _vscan()
+    op = spec.out_specs[0]
+    bad_op = dataclasses.replace(
+        op, index_map=lambda f, bb, iw, ih: (f, bb, ih, iw + 1))
+    check = kc.check_in_bounds(
+        dataclasses.replace(spec, out_specs=(bad_op,)))
+    assert check.status == "fail"
+    assert "outside the padded extent" in check.detail
+
+
+def test_oversized_scratch_fails_vmem():
+    spec = _vscan()
+    bad = dataclasses.replace(
+        spec, scratch=(Scratch("huge", (64, 1024, 1024)),))
+    assert kc.check_vmem_fit(bad).status == "fail"
+    # tile=1024 blows the block budget through the same spec arithmetic
+    big = kc.check_method(
+        "wf_tis", KernelGeometry(n=1, h=2048, w=2048, num_bins=32,
+                                 tile=1024))
+    assert [c.status for c in big.checks if c.name == "vmem-fit"] \
+        == ["fail"]
+    assert big.ok is False
+
+
+# ---------------------------------------------------------------------------
+# spec-vs-pallas_call conformance (interpret mode, uneven shapes)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", sorted(ops.KERNEL_SPECS))
+def test_spec_matches_live_pallas_call(method, monkeypatch):
+    """Capture the real ``pallas_call`` arguments and compare them field
+    by field against the KernelSpec — grid, block shapes, index maps at
+    EVERY grid point, out_shape, scratch shapes — while the same run
+    checks numeric parity against the jnp oracle."""
+    from jax.experimental import pallas as pl
+
+    from repro.kernels.ref import integral_histogram_ref
+
+    captured = []
+    real = pl.pallas_call
+
+    def spy(kernel, **kw):
+        captured.append(kw)
+        return real(kernel, **kw)
+
+    # both kernel modules bind `pl` to this same module object
+    monkeypatch.setattr(pl, "pallas_call", spy)
+
+    rng = np.random.default_rng(7)
+    frames = rng.integers(0, 256, (SMALL.n, SMALL.h, SMALL.w), np.uint8)
+    out = ops.integral_histogram(
+        frames, SMALL.num_bins, method=method, backend="pallas",
+        tile=SMALL.tile, bin_block=SMALL.bin_block, interpret=True)
+    for i in range(SMALL.n):
+        ref = integral_histogram_ref(frames[i], SMALL.num_bins)
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(ref))
+
+    specs = ops.KERNEL_SPECS[method](SMALL)
+    assert len(captured) == len(specs), \
+        f"{len(specs)} declared pass(es), {len(captured)} pallas_call(s)"
+    for spec, call in zip(specs, captured):
+        assert tuple(call["grid"]) == spec.grid_sizes, spec.name
+        outs = call["out_specs"]
+        if not isinstance(outs, (list, tuple)):
+            outs = [outs]
+        live = list(call["in_specs"]) + list(outs)
+        declared = spec.in_specs + spec.out_specs
+        assert len(live) == len(declared), spec.name
+        for op, bs in zip(declared, live):
+            assert tuple(bs.block_shape) == op.block, \
+                f"{spec.name}:{op.name} block"
+            for g in kc.iter_grid(spec):
+                key = tuple(g[d] for d in spec.dim_names)
+                assert tuple(bs.index_map(*key)) \
+                    == tuple(op.index_map(*key)), \
+                    f"{spec.name}:{op.name} index map at {g}"
+        out_sds = call["out_shape"]
+        assert tuple(out_sds.shape) == spec.out_specs[0].shape, spec.name
+        live_scratch = [tuple(s.shape) for s in call["scratch_shapes"]]
+        assert live_scratch == [s.shape for s in spec.scratch], spec.name
+
+
+# ---------------------------------------------------------------------------
+# plancheck/engine wiring
+# ---------------------------------------------------------------------------
+def _pallas_plan(shape=(480, 640), **kw):
+    from repro.core.engine import HistogramEngine, plan
+
+    e = HistogramEngine(32, backend="pallas", **kw)
+    return e, plan(e.spec_for(shape, "uint8"))
+
+
+def test_plancheck_vmem_delegates_to_kernelcheck():
+    """One VMEM model: the plan-level estimate IS the spec-derived
+    number (the duplicated hand formula is gone)."""
+    from repro.analysis.plancheck import _vmem_estimate
+
+    for method in sorted(ops.KERNEL_SPECS):
+        e, p = _pallas_plan()
+        p = dataclasses.replace(p, method=method)
+        est = _vmem_estimate(p)
+        assert est is not None
+        geom = kc.plan_geometry(p)
+        assert est == kc.vmem_required(method, geom)
+        assert est[0] == max(
+            s.vmem_bytes() for s in ops.KERNEL_SPECS[method](geom))
+
+
+def test_vmem_estimate_none_for_non_pallas_methods():
+    from repro.analysis.plancheck import _vmem_estimate
+
+    e, p = _pallas_plan()
+    assert _vmem_estimate(dataclasses.replace(p, method="cw_b")) is None
+
+
+def test_validate_deep_merges_kernel_checks():
+    e, p = _pallas_plan()
+    shallow = e.validate(p)
+    assert "kernel-carry" not in shallow.render()
+    deep = e.validate(p, deep=True)
+    assert deep.ok
+    names = [c.name for c in deep.checks]
+    for n in ("kernel-carry", "kernel-coverage", "kernel-bounds",
+              "kernel-vmem"):
+        assert n in names
+    # explain() surfaces the deep verdict (last_verdict)
+    e.last_plan = p
+    assert "kernel-carry" in e.explain()
+
+
+def test_validate_deep_skips_for_jnp_backend():
+    from repro.core.engine import HistogramEngine, plan
+
+    e = HistogramEngine(32, backend="jnp")
+    p = plan(e.spec_for((480, 640), "uint8"))
+    deep = e.validate(p, deep=True)
+    assert deep.ok
+    skip = [c for c in deep.checks if c.name == "kernel-checks"]
+    assert len(skip) == 1 and skip[0].status == "skip"
+
+
+def _broken_wf_specs(geom):
+    """wf_tis re-declared with ih/iw swapped but carry edges kept — the
+    row carry's happens-before no longer holds."""
+    from repro.kernels import wf_tis
+
+    (spec,) = wf_tis.kernel_specs(geom)
+    sizes = dict(spec.grid)
+    return (dataclasses.replace(spec, grid=(
+        ("f", sizes["f"]), ("iw", sizes["iw"]),
+        ("ih", sizes["ih"]), ("bb", sizes["bb"]),
+    )),)
+
+
+def test_engine_deep_validate_rejects_failing_spec(
+        monkeypatch, fresh_caches):
+    from repro.core.engine import PlanValidationError
+
+    monkeypatch.setitem(ops.KERNEL_SPECS, "wf_tis", _broken_wf_specs)
+    e, p = _pallas_plan()
+    deep = e.validate(p, deep=True)
+    assert not deep.ok
+    assert {c.name for c in deep.failures} <= {
+        "kernel-carry", "kernel-coverage", "kernel-bounds"}
+    assert any(c.name == "kernel-carry" for c in deep.failures)
+    # shallow validation still passes — the rejection is the deep gate's
+    assert e.validate(p).ok
+    # and run() refuses to dispatch (validate-or-raise runs deep)
+    with pytest.raises(PlanValidationError, match="kernel-carry"):
+        e.run(np.zeros((480, 640), np.uint8))
+
+
+# ---------------------------------------------------------------------------
+# CLI: python -m repro.analysis --check-kernels
+# ---------------------------------------------------------------------------
+def test_cli_check_kernels_clean(tmp_path, capsys):
+    report = tmp_path / "kernelcheck.json"
+    rc = analysis_main(["--check-kernels", "--json", str(report)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "kernel verdict(s), 0 failed" in out
+    data = json.loads(report.read_text())
+    assert data["counts"]["failed"] == 0
+    assert data["counts"]["total"] == len(data["verdicts"])
+    methods = {v["method"] for v in data["verdicts"]}
+    assert methods == set(ops.KERNEL_SPECS)
+    for v in data["verdicts"]:
+        assert v["ok"] is True
+        assert {c["status"] for c in v["checks"]} == {"ok"}
+        assert {c["name"] for c in v["checks"]} == set(CHECK_NAMES)
+
+
+def test_cli_check_kernels_fails_on_bad_spec(
+        monkeypatch, fresh_caches, capsys):
+    monkeypatch.setitem(ops.KERNEL_SPECS, "wf_tis", _broken_wf_specs)
+    rc = analysis_main(["--check-kernels"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "REJECTED" in out
+
+
+def test_cli_check_kernels_usage_errors(capsys):
+    # modes are mutually exclusive
+    assert analysis_main(["--check-kernels", "--check"]) == 2
+    assert analysis_main(["--check-kernels", "--write-baseline"]) == 2
+    # and the mode takes no lint paths
+    assert analysis_main(["--check-kernels", "src/repro"]) == 2
+    capsys.readouterr()
