@@ -39,6 +39,8 @@ BENCHES = [
     ("serve", "benchmarks.bench_serve",
      "ISSUE 5 — AnalyticsService requests/sec vs in-flight depth and "
      "cache"),
+    ("fused", "benchmarks.bench_fused",
+     "ISSUE 8 — query-fused corner rows vs banded streaming"),
     ("multidevice", "benchmarks.bench_multidevice",
      "paper Fig. 16/17 — multi-device bin/spatial sharding"),
     ("speedup", "benchmarks.bench_speedup",

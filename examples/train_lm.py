@@ -6,9 +6,13 @@ full substrate — seekable data, AdamW, checkpointing, fault injection.
         --layers 10       # the full ~100M run (CPU: ~lunch break)
 
 The default config is a 8-layer / d=512 (~64M with embeddings) member of
-the llama family; --d-model 640 --layers 10 reaches ~100M.  On real
-hardware the same driver trains the assigned full configs under the
-production mesh (launch/train.py adds the mesh plumbing).
+the llama family; --d-model 640 --layers 10 reaches ~100M.
+
+NOTE: this driver (and the repro.{configs,models,train,launch} packages
+it exercises) is untouched seed substrate, unrelated to the
+integral-histogram paper this repo reproduces — see docs/module-map.md.
+It is kept runnable as a substrate smoke test; there are no "assigned
+full configs" or production meshes behind it.
 """
 
 import argparse

@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""Link/anchor checker for the markdown docs (stdlib only — CI docs job).
+
+    python scripts/check_docs.py README.md docs
+
+Walks every given markdown file (directories are searched for ``*.md``)
+and verifies each relative link:
+
+  * the target file exists (resolved against the linking file's dir);
+  * a ``#anchor`` fragment matches a heading slug in the target file
+    (GitHub slugging: lowercase, punctuation dropped, spaces -> dashes).
+
+External links (http/https/mailto) are not fetched — CI must not flake
+on the network. Exit 1 with one line per broken link.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+CODE_FENCE_RE = re.compile(r"^\s*(```|~~~)")
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor slug: strip markup, lowercase, keep word chars,
+    spaces and hyphens, then spaces -> hyphens."""
+    text = re.sub(r"[`*_]", "", heading).strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def heading_slugs(path: pathlib.Path) -> set[str]:
+    slugs: set[str] = set()
+    counts: dict[str, int] = {}
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = slugify(m.group(1))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def iter_links(path: pathlib.Path):
+    in_fence = False
+    for lineno, line in enumerate(
+            path.read_text(encoding="utf-8").splitlines(), 1):
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            yield lineno, m.group(1)
+
+
+def check_file(path: pathlib.Path, root: pathlib.Path) -> list[str]:
+    errors = []
+    for lineno, target in iter_links(path):
+        where = f"{path.relative_to(root)}:{lineno}"
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        ref, _, anchor = target.partition("#")
+        dest = path if not ref else (path.parent / ref).resolve()
+        if ref and not dest.exists():
+            errors.append(f"{where}: broken link {target!r} "
+                          f"(no such file {ref!r})")
+            continue
+        if anchor and dest.suffix == ".md":
+            if anchor not in heading_slugs(dest):
+                errors.append(f"{where}: broken anchor {target!r} "
+                              f"(no heading slug {anchor!r} in "
+                              f"{dest.name})")
+    return errors
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:]) or ["README.md",
+                                                            "docs"]
+    root = pathlib.Path.cwd()
+    files: list[pathlib.Path] = []
+    for a in args:
+        p = pathlib.Path(a)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.exists():
+            files.append(p)
+        else:
+            print(f"check_docs: no such path {a!r}", file=sys.stderr)
+            return 2
+    errors = [e for f in files for e in check_file(f.resolve(), root)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_docs: {len(files)} file(s), {len(errors)} broken "
+          f"link(s)/anchor(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -385,16 +385,35 @@ DEFAULT_GEOMETRIES = (
 # ---------------------------------------------------------------------------
 # plancheck bridge
 # ---------------------------------------------------------------------------
+def plan_method(plan) -> str:
+    """The kernel a plan actually dispatches: a query-fused plan runs
+    the fused-rows kernel (kernels/fused_rows.py) no matter which scan
+    method it names — verify THAT spec, not the full-H one."""
+    return "fused_rows" if plan.representation == "fused" else plan.method
+
+
 def plan_geometry(plan) -> KernelGeometry:
     """The launch geometry an ExecutionPlan's dispatches use: microbatch
     frames per dispatch (floor 2 — the canonical enumeration needs the
     frame-boundary resets exercised either way), band height rather than
-    frame height when the plan streams bands."""
+    frame height when the plan streams bands.  Fused plans get a
+    :class:`~repro.kernels.specs.FusedRowsGeometry` carrying the real
+    per-strip emission width and the early-exit height (the scan stops
+    after the strip holding the last requested row)."""
     s = plan.spec
+    n = max(plan.microbatch, 1)
+    if plan.representation == "fused":
+        from repro.kernels.fused_rows import fused_geometry
+
+        rows = s.query_rows
+        h_cut = min(s.height, (max(rows) // plan.tile + 1) * plan.tile)
+        return fused_geometry(
+            rows, n, h_cut, s.width, s.num_bins,
+            tile=plan.tile, bin_block=plan.bin_block,
+        )
     h = s.height
     if plan.band_plan is not None:
         h = plan.band_plan.band_h
-    n = max(plan.microbatch, 1)
     return KernelGeometry(n=n, h=h, w=s.width, num_bins=s.num_bins,
                           tile=plan.tile, bin_block=plan.bin_block)
 

@@ -127,10 +127,19 @@ def _eval_kernel(plan, h: int, w: int, *, with_carry: bool):
 def _check_representation(plan) -> PlanCheck:
     name = "representation"
     s = plan.spec
-    known = ("dense", "banded", "spilled", "sharded")
+    known = ("dense", "banded", "spilled", "sharded", "fused")
     if plan.representation not in known:
         return PlanCheck(name, "fail",
                          f"unknown representation {plan.representation!r}")
+    if plan.representation == "fused":
+        if not s.query_rows:
+            return PlanCheck(
+                name, "fail",
+                "fused plan without query_rows — nothing declares which "
+                "corner rows to emit")
+        return PlanCheck(
+            name, "ok",
+            f"fused: {len(s.query_rows)} corner row(s), H never stored")
     if plan.representation == "sharded":
         if s.mesh is None:
             return PlanCheck(name, "fail", "sharded plan without a mesh")
@@ -160,9 +169,49 @@ def _check_representation(plan) -> PlanCheck:
     return PlanCheck(name, "ok", plan.representation)
 
 
+def _eval_fused(plan):
+    """``jax.eval_shape`` the fused corner-row dispatch."""
+    from repro.kernels.ops import fused_corner_rows
+
+    s = plan.spec
+    lead = _lead(plan)
+    img = jax.ShapeDtypeStruct((*lead, s.height, s.width), np.dtype(s.dtype))
+    rows = np.asarray(s.query_rows, np.int64)
+
+    def fn(image):
+        return fused_corner_rows(
+            image, s.num_bins, rows, method=plan.method,
+            backend=plan.backend, tile=plan.tile, bin_block=plan.bin_block,
+            use_mxu=s.use_mxu, interpret=s.interpret,
+            value_range=s.value_range,
+        )
+
+    return jax.eval_shape(fn, img)
+
+
 def _check_h_shape(plan) -> PlanCheck:
     name = "h-shape"
     s = plan.spec
+    if plan.representation == "fused":
+        try:
+            out = _eval_fused(plan)
+        except Exception as e:
+            return PlanCheck(name, "fail", f"fused abstract eval: {e}")
+        expect = (*_lead(plan), s.num_bins, len(s.query_rows), s.width)
+        if tuple(out.shape) != expect:
+            return PlanCheck(
+                name, "fail",
+                f"fused dispatch yields {tuple(out.shape)}, plan expects "
+                f"the corner-row slab {expect}")
+        if out.dtype != np.float32:
+            return PlanCheck(
+                name, "fail",
+                f"fused dispatch yields {out.dtype}, engine arithmetic "
+                "is fp32")
+        return PlanCheck(
+            name, "ok",
+            f"corner-row slab {expect} float32 via fused "
+            f"{plan.method}/{plan.backend}")
     try:
         out = _eval_kernel(plan, s.height, s.width, with_carry=False)
     except Exception as e:  # abstract eval surfaces kernel/shape errors
@@ -219,7 +268,12 @@ def _check_memory_budget(plan) -> PlanCheck:
     budget = s.memory_budget_bytes
     if budget is None:
         return PlanCheck(name, "skip", "no memory budget declared")
-    if plan.band_plan is not None:
+    if plan.representation == "fused":
+        k = len(s.query_rows)
+        nf = 1 if s.num_frames is None else s.num_frames
+        live = 4 * nf * s.num_bins * k * s.width
+        what = f"fused corner-row slab ({k} row(s))"
+    elif plan.band_plan is not None:
         live = plan.band_plan.band_bytes
         what = f"largest band ({plan.band_plan.band_h} rows)"
     else:
@@ -243,7 +297,7 @@ def _vmem_estimate(plan) -> tuple[int, str] | None:
     from repro.analysis import kernelcheck
 
     return kernelcheck.vmem_required(
-        plan.method, kernelcheck.plan_geometry(plan))
+        kernelcheck.plan_method(plan), kernelcheck.plan_geometry(plan))
 
 
 def _check_vmem_fit(plan) -> PlanCheck:
@@ -368,7 +422,8 @@ def _kernel_checks(plan) -> tuple[PlanCheck, ...]:
             f"{plan.backend} backend dispatches no Pallas kernel"),)
     geom = kernelcheck.plan_geometry(plan)
     try:
-        verdict = kernelcheck.check_method(plan.method, geom)
+        verdict = kernelcheck.check_method(
+            kernelcheck.plan_method(plan), geom)
     except KeyError as e:
         return (PlanCheck(
             "kernel-checks", "fail",

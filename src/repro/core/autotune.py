@@ -1,0 +1,208 @@
+"""Tile/band-shape autotuner: measured configs the planner loads as priors.
+
+The paper's §4.2/§4.5 point is that tile shape decides throughput and the
+best shape is hardware- and geometry-dependent; ``benchmarks/bench_roofline``
+measures where each config sits against the machine's streaming bandwidth.
+This module closes the loop: ``autotune()`` times the real dispatch over a
+candidate grid of (tile, bin_block) — and a band-height sweep when a memory
+budget applies — and persists the winners to JSON.  ``plan()`` consults that
+file (via :func:`prior_for`) and substitutes the tuned tile/bin_block when
+the caller left them at the defaults, stamping the plan's ``tuned`` field so
+``explain()`` shows the provenance.
+
+The priors file is opt-in: it is looked up from the ``REPRO_TUNED_CONFIGS``
+environment variable (or an explicit path), so default plans — and the
+golden ``explain()`` snapshots — are byte-identical with no file present.
+
+Format (one entry per workload geometry)::
+
+    {"version": 1,
+     "configs": {"480x640x32": {"tile": 128, "bin_block": 8,
+                                "band_h": 120, "seconds": 0.0123,
+                                "gbps": 3.1}}}
+
+CLI::
+
+    python -m repro.core.autotune --height 480 --width 640 --bins 32 \
+        --out tuned.json
+    REPRO_TUNED_CONFIGS=tuned.json python ...   # planner picks it up
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+#: environment variable naming the priors file ``plan()`` consults.
+ENV_VAR = "REPRO_TUNED_CONFIGS"
+
+#: candidate grid — the shapes bench_grid/bench_roofline sweep.
+TILE_CANDIDATES = (64, 128, 256)
+BIN_BLOCK_CANDIDATES = (4, 8, 16)
+
+# (path, mtime) -> parsed configs; reloads only when the file changes.
+_cache: dict[tuple[str, float], dict] = {}
+
+
+def config_key(height: int, width: int, num_bins: int) -> str:
+    return f"{height}x{width}x{num_bins}"
+
+
+def load_priors(path: str | None = None) -> dict:
+    """The tuned-config table, or ``{}`` when no file is configured.
+
+    ``path=None`` reads ``$REPRO_TUNED_CONFIGS``; a missing/unreadable
+    file is an empty table, not an error — priors are advisory.
+    """
+    path = path or os.environ.get(ENV_VAR)
+    if not path:
+        return {}
+    try:
+        mtime = os.path.getmtime(path)
+    except OSError:
+        return {}
+    key = (os.path.abspath(path), mtime)
+    if key not in _cache:
+        try:
+            with open(path) as f:
+                data = json.load(f)
+            configs = data.get("configs", {})
+        except (OSError, ValueError):
+            configs = {}
+        _cache.clear()           # one live file; stale mtimes drop out
+        _cache[key] = configs
+    return _cache[key]
+
+
+def prior_for(spec, path: str | None = None) -> dict | None:
+    """The tuned config for ``spec``'s geometry, if the caller left the
+    shape knobs at their defaults (an explicit tile/bin_block is a user
+    decision the prior must not override)."""
+    if spec.tile != 128 or spec.bin_block != 8:
+        return None
+    priors = load_priors(path)
+    return priors.get(config_key(spec.height, spec.width, spec.num_bins))
+
+
+def _time_call(fn, repeats: int) -> float:
+    fn()                                          # compile / warm caches
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        getattr(out, "block_until_ready", lambda: out)()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune(
+    height: int,
+    width: int,
+    num_bins: int,
+    *,
+    method: str = "wf_tis",
+    backend: str = "auto",
+    memory_budget_bytes: int | None = None,
+    tiles=TILE_CANDIDATES,
+    bin_blocks=BIN_BLOCK_CANDIDATES,
+    repeats: int = 3,
+    rng=None,
+) -> dict:
+    """Measure the candidate grid on this machine, return the winner.
+
+    The returned dict is one priors-file entry: the fastest
+    ``(tile, bin_block)`` for a full-frame dispatch, the fastest
+    ``band_h`` under ``memory_budget_bytes`` (when given), the winning
+    time and its effective bandwidth (touched bytes / time — the number
+    to put beside ``bench_roofline``'s streaming ceiling).
+    """
+    from repro.core.bands import plan_bands
+    from repro.kernels.ops import integral_histogram
+
+    rng = np.random.default_rng(0) if rng is None else rng
+    frame = rng.integers(0, 256, (height, width), np.uint8)
+    touched = height * width + 4 * num_bins * height * width
+
+    best = None
+    for tile in tiles:
+        for bb in bin_blocks:
+            sec = _time_call(
+                lambda t=tile, b=bb: integral_histogram(
+                    frame, num_bins, method=method, backend=backend,
+                    tile=t, bin_block=b,
+                ),
+                repeats,
+            )
+            if best is None or sec < best["seconds"]:
+                best = {"tile": tile, "bin_block": bb, "seconds": sec}
+
+    if memory_budget_bytes is not None:
+        budget_plan = plan_bands(
+            height, width, num_bins,
+            memory_budget_bytes=memory_budget_bytes,
+        )
+        cands = sorted({
+            bh for bh in (
+                budget_plan.band_h, budget_plan.band_h // 2, best["tile"],
+            ) if 1 <= bh <= budget_plan.band_h
+        })
+        best_bh = None
+        for bh in cands:
+            sec = _time_call(
+                lambda b=bh: integral_histogram(
+                    frame, num_bins, method=method, backend=backend,
+                    tile=best["tile"], bin_block=best["bin_block"],
+                    memory_budget_bytes=4 * num_bins * b * width,
+                ),
+                repeats,
+            )
+            if best_bh is None or sec < best_bh[1]:
+                best_bh = (bh, sec)
+        best["band_h"] = best_bh[0]
+
+    best["gbps"] = touched / best["seconds"] / 1e9
+    return best
+
+
+def save_priors(path: str, configs: dict) -> None:
+    with open(path, "w") as f:
+        json.dump({"version": 1, "configs": configs}, f, indent=2,
+                  sort_keys=True)
+        f.write("\n")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.autotune",
+        description="tune tile/bin_block/band_h for one workload geometry "
+                    "and persist the winner as a planner prior",
+    )
+    ap.add_argument("--height", type=int, default=480)
+    ap.add_argument("--width", type=int, default=640)
+    ap.add_argument("--bins", type=int, default=32)
+    ap.add_argument("--budget", type=int, default=None,
+                    help="memory budget (bytes) to tune a band height under")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default="tuned.json",
+                    help="priors file to merge the result into")
+    args = ap.parse_args(argv)
+
+    entry = autotune(
+        args.height, args.width, args.bins,
+        memory_budget_bytes=args.budget, repeats=args.repeats,
+    )
+    configs = dict(load_priors(args.out))
+    key = config_key(args.height, args.width, args.bins)
+    configs[key] = entry
+    save_priors(args.out, configs)
+    print(f"{key}: {entry}")
+    print(f"wrote {args.out} — export {ENV_VAR}={args.out} to use it")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -39,6 +39,7 @@ from typing import Iterable, Iterator
 import jax
 import numpy as np
 
+from repro.core import autotune
 from repro.core.bands import (
     BandPlan,
     STORAGE_POLICIES,
@@ -48,12 +49,21 @@ from repro.core.bands import (
 from repro.core.hsource import (
     BandedH,
     DenseH,
+    FusedRowsH,
     HSource,
     PrefetchedRowsH,
     ShardedH,
 )
 
-REPRESENTATIONS = ("dense", "banded", "spilled", "sharded")
+REPRESENTATIONS = ("dense", "banded", "spilled", "sharded", "fused")
+
+# Ehsan-style compute-vs-store bound: fuse the queries into the scan
+# (never store H) when the request's corner-row union is at most this
+# fraction of the frame height.  At 1/4 the fused row slab is at most
+# per_frame_h_bytes / 4 and the early-exit scan skips whole bands, so
+# fusion strictly dominates; past it, re-running the scan for follow-up
+# queries starts losing to storing H once.
+_FUSE_ROW_FRACTION = 4
 
 # "auto" microbatching targets this per-dispatch output footprint — roughly
 # an LLC's worth, the crossover between dispatch-bound and cache-bound
@@ -112,6 +122,13 @@ class WorkloadSpec:
     sharding: str = "auto"              # "auto" | "bin" | "spatial"
     bin_axis: str = "model"
     row_axis: str = "data"
+    # The corner-row union of the request's declared queries (sorted,
+    # ascending, within [0, height)), or None when the queries are not
+    # known up front.  This is the input to the Ehsan compute-vs-store
+    # decision: a small-enough union lets plan() fuse the queries into
+    # the scan and never store H.  engine.run() fills it automatically
+    # from the queries' needed_rows declarations.
+    query_rows: tuple[int, ...] | None = None
 
     @property
     def per_frame_h_bytes(self) -> int:
@@ -132,7 +149,7 @@ class ExecutionPlan:
     (asserted in tests/test_engine.py)."""
 
     spec: WorkloadSpec
-    representation: str                 # dense | banded | spilled | sharded
+    representation: str        # dense | banded | spilled | sharded | fused
     method: str
     backend: str                        # resolved: "pallas" | "jnp"
     tile: int
@@ -142,6 +159,7 @@ class ExecutionPlan:
     storage: str | None
     sharding: str | None                # None | "bin" | "spatial"
     microbatch_mode: str = "fixed"      # "fixed" | "adaptive"
+    tuned: str | None = None            # autotune priors key, if applied
 
     def explain(self, verdict=None) -> str:
         """Human-readable plan rationale (golden-snapshot tested).
@@ -160,8 +178,32 @@ class ExecutionPlan:
             f"  full H          : {per_frame} B/frame "
             f"({per_frame / 2**20:.1f} MiB fp32)",
             f"  representation  : {self.representation}",
+        ]
+        if s.query_rows is not None:
+            k = len(s.query_rows)
+            nf = 1 if s.num_frames is None else s.num_frames
+            if self.representation == "fused":
+                rows_b = 4 * nf * s.num_bins * k * s.width
+                lines.append(
+                    f"  query fusion    : fuse — {k} corner row(s) "
+                    f"({rows_b} B) << full H {per_frame} B; H never stored"
+                )
+            else:
+                bound = s.height // _FUSE_ROW_FRACTION
+                why = (
+                    f"{k} corner row(s) exceed the fuse bound "
+                    f"({bound} rows)"
+                    if k > bound else
+                    f"{k} corner row(s), but the request pins another path"
+                )
+                lines.append(
+                    f"  query fusion    : store — {why}; fall back to "
+                    f"{self.representation}"
+                )
+        lines += [
             f"  method/backend  : {self.method} / {self.backend}",
-            f"  tile/bin_block  : {self.tile} / {self.bin_block}",
+            f"  tile/bin_block  : {self.tile} / {self.bin_block}"
+            + (f" (tuned prior {self.tuned})" if self.tuned else ""),
             f"  microbatch      : {self.microbatch} frame(s)/dispatch"
             + (" (adaptive start)" if self.microbatch_mode == "adaptive"
                else ""),
@@ -222,6 +264,11 @@ def plan(spec: WorkloadSpec) -> ExecutionPlan:
 
     The decision tree (documented here because it IS the product):
 
+      0. query_rows known and small (at most height/4 rows, no
+         mesh/storage pinning another path, row slab within any budget)
+         -> fused: compute ONLY those corner rows straight out of the
+         scan, never store H (the Ehsan compute-vs-store decision,
+         arXiv:1510.05138).
       1. mesh given        -> sharded.  "auto" picks the paper's bin
          mapping when num_bins divides the bin axis, else the spatial
          (row-strip) mapping.  A memory budget on top bands the stream
@@ -234,8 +281,23 @@ def plan(spec: WorkloadSpec) -> ExecutionPlan:
       4. otherwise         -> dense.
 
     Microbatch comes from the per-frame H footprint (auto_batch_size),
-    capped by ``num_frames``; banded/spilled paths stream whole frames,
-    so their microbatch is the full request arity.
+    capped by ``num_frames``; banded/spilled/fused paths stream whole
+    requests, so their microbatch is the full request arity.
+
+    A tuned-config priors file (core/autotune.py, opt-in via the
+    ``REPRO_TUNED_CONFIGS`` environment variable) overrides the default
+    tile/bin_block for geometries it has measured; the plan's ``tuned``
+    field records the applied key.
+
+    >>> p = plan(WorkloadSpec(height=64, width=64, num_bins=8))
+    >>> p.representation, p.method
+    ('dense', 'wf_tis')
+    >>> fused = plan(WorkloadSpec(height=64, width=64, num_bins=8,
+    ...                           query_rows=(15, 31)))
+    >>> fused.representation
+    'fused'
+    >>> print(fused.explain().splitlines()[4])
+      query fusion    : fuse — 2 corner row(s) (4096 B) << full H 131072 B; H never stored
     """
     backend = _resolve_backend(spec.backend, spec.method)
     if spec.method not in _known_methods():
@@ -244,6 +306,45 @@ def plan(spec: WorkloadSpec) -> ExecutionPlan:
     microbatch = auto_batch_size(spec.num_bins, spec.height, spec.width)
     if nf is not None:
         microbatch = max(1, min(microbatch, nf))
+
+    tile, bin_block, tuned = spec.tile, spec.bin_block, None
+    prior = autotune.prior_for(spec)
+    if prior:
+        tile = int(prior.get("tile", tile))
+        bin_block = int(prior.get("bin_block", bin_block))
+        tuned = autotune.config_key(spec.height, spec.width, spec.num_bins)
+
+    if spec.query_rows is not None:
+        rows = spec.query_rows
+        k = len(rows)
+        if not all(
+            0 <= r < spec.height for r in rows
+        ) or list(rows) != sorted(set(rows)):
+            raise ValueError(
+                f"query_rows must be sorted unique within "
+                f"[0, {spec.height}), got {rows[:8]}"
+            )
+        nf_eff = 1 if nf is None else nf
+        rows_bytes = 4 * nf_eff * spec.num_bins * k * spec.width
+        fits = (
+            spec.memory_budget_bytes is None
+            or rows_bytes <= spec.memory_budget_bytes
+        )
+        if (
+            0 < k <= spec.height // _FUSE_ROW_FRACTION
+            and spec.storage is None
+            and spec.mesh is None
+            and fits
+        ):
+            return ExecutionPlan(
+                spec=spec, representation="fused", method=spec.method,
+                backend=backend, tile=tile, bin_block=bin_block,
+                microbatch=(microbatch if nf is None else nf),
+                band_plan=None, storage=None, sharding=None,
+                microbatch_mode=(
+                    "adaptive" if spec.adaptive_microbatch else "fixed"),
+                tuned=tuned,
+            )
 
     if spec.storage is not None:
         validate_storage_policy(spec.storage, spec.height, spec.width)
@@ -294,11 +395,12 @@ def plan(spec: WorkloadSpec) -> ExecutionPlan:
                 band_plan = None
         return ExecutionPlan(
             spec=spec, representation="sharded", method=spec.method,
-            backend=backend, tile=spec.tile, bin_block=spec.bin_block,
+            backend=backend, tile=tile, bin_block=bin_block,
             microbatch=microbatch, band_plan=band_plan,
             storage=None, sharding=sharding,
             microbatch_mode=(
                 "adaptive" if spec.adaptive_microbatch else "fixed"),
+            tuned=tuned,
         )
 
     if spec.memory_budget_bytes is not None:
@@ -331,11 +433,12 @@ def plan(spec: WorkloadSpec) -> ExecutionPlan:
 
     return ExecutionPlan(
         spec=spec, representation=representation, method=spec.method,
-        backend=backend, tile=spec.tile, bin_block=spec.bin_block,
+        backend=backend, tile=tile, bin_block=bin_block,
         microbatch=microbatch, band_plan=band_plan,
         storage=spec.storage, sharding=None,
         microbatch_mode=("adaptive" if spec.adaptive_microbatch
                          else "fixed"),
+        tuned=tuned,
     )
 
 
@@ -354,6 +457,41 @@ def _window_rows(source: HSource, window, stride) -> np.ndarray:
     if n_r <= 0 or n_c <= 0:
         return np.zeros((0,), np.int64)
     return np.unique(np.concatenate([bot, top[top >= 0]]))
+
+
+class _GeomView:
+    """Just enough HSource surface for ``needed_rows`` declarations to
+    run BEFORE any H exists — the planner asks the queries what rows
+    they read from frame geometry alone (the fuse/store input)."""
+
+    def __init__(self, height: int, width: int):
+        self.height = height
+        self.width = width
+
+    _window_lattices = HSource._window_lattices
+
+
+def _declared_rows(queries, height: int, width: int) -> tuple[int, ...] | None:
+    """The corner-row union the request will read, from the queries'
+    ``needed_rows`` declarations — or ``None`` when any query cannot
+    declare its rows up front (then fusion is off the table)."""
+    view = _GeomView(height, width)
+    needs = []
+    for q in queries:
+        declare = getattr(q, "needed_rows", None)
+        if declare is None:
+            return None
+        rows = declare(view)
+        if rows is None:
+            return None
+        needs.append(np.asarray(rows))
+    if not needs:
+        return None
+    rows = np.unique(np.concatenate(needs))
+    rows = rows[(rows >= 0) & (rows < height)]
+    if rows.size == 0:
+        return None
+    return tuple(int(r) for r in rows)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -623,6 +761,21 @@ class HistogramEngine:
             p = self.plan_for(frames)
         kw = self._kernel_kwargs(p)
 
+        if p.representation == "fused":
+            from repro.kernels.ops import fused_corner_rows
+
+            rows = np.asarray(p.spec.query_rows, np.int64)
+            stats: dict = {}
+            R = fused_corner_rows(
+                frames, self.num_bins, rows, stats=stats, **kw,
+            )
+            source = FusedRowsH(
+                rows, np.asarray(R),
+                height=p.spec.height, width=p.spec.width,
+            )
+            source.last_fused_stats = stats
+            return source
+
         if p.representation == "sharded":
             from repro.core import distributed
 
@@ -665,12 +818,32 @@ class HistogramEngine:
     def run(self, frames, queries: Iterable = ()) -> EngineResult:
         """Plan, compute, and answer ``queries`` in order.
 
-        Multiple queries against a band-streamed plan share ONE stream:
-        the union of every query's corner rows is fetched in a single
-        ``rows()`` pass (``prefetch_rows``) instead of re-running the
-        banded kernel per query."""
-        p = self.plan_for(frames)
+        The queries shape the plan: their declared corner-row union goes
+        into the spec as ``query_rows``, and when it is small the planner
+        fuses the queries into the scan (``representation == "fused"``)
+        so H is never stored.  Multiple queries against a band-streamed
+        plan share ONE stream: the union of every query's corner rows is
+        fetched in a single ``rows()`` pass (``prefetch_rows``) instead
+        of re-running the banded kernel per query.
+
+        >>> import numpy as np
+        >>> from repro.core.engine import HistogramEngine, RegionQuery
+        >>> frame = np.arange(64, dtype=np.uint8).reshape(8, 8) % 4
+        >>> eng = HistogramEngine(num_bins=4, value_range=4, backend="jnp")
+        >>> out = eng.run(frame, [RegionQuery([[0, 0, 7, 7]])])
+        >>> out.plan.representation      # 1 corner row -> query-fused
+        'fused'
+        >>> [float(v) for v in np.asarray(out.results[0]).ravel()]
+        [16.0, 16.0, 16.0, 16.0]
+        """
         queries = list(queries)
+        spec = self.spec_for(np.shape(frames),
+                             getattr(frames, "dtype", "uint8"))
+        rows = _declared_rows(queries, spec.height, spec.width)
+        if rows is not None:
+            spec = dataclasses.replace(spec, query_rows=rows)
+        p = plan(spec)
+        self.last_plan = p
         self._validate_or_raise(p, queries)
         source = self.compute(frames, p)
         target = source

@@ -43,6 +43,16 @@ import numpy as np
 from repro.core import region_query as rq
 
 
+class MissingRowsError(KeyError):
+    """A row-restricted source was asked for rows it does not hold.
+
+    Raised by :class:`PrefetchedRowsH` (engine prefetch missed a query's
+    rows — a caller bug) and :class:`FusedRowsH` (a fused result holds
+    ONLY its request's corner rows; asking for more means the request
+    changed and the engine must recompute — ``AnalyticsService`` catches
+    exactly this to fall back from a fused cache hit)."""
+
+
 class HSource(abc.ABC):
     """Corner-row access + metadata over any integral-histogram holder."""
 
@@ -440,11 +450,82 @@ class PrefetchedRowsH(HSource):
             self._needed[np.minimum(idx, len(self._needed) - 1)] != row_ids
         ) if len(self._needed) else np.ones(row_ids.shape, bool)
         if row_ids.size and bad.any():
-            raise KeyError(
+            raise MissingRowsError(
                 f"rows {row_ids[bad].tolist()} were not prefetched; the "
                 "engine's row-union must cover every query"
             )
         return self._R[..., idx, :]
+
+
+class FusedRowsH(HSource):
+    """The result of a query-fused dispatch: corner rows WITHOUT an H.
+
+    A fused plan (``plan().representation == "fused"``) never builds the
+    (n, b, h, w) integral histogram — ``kernels.ops.fused_corner_rows``
+    emits exactly the rows the request's queries read (Eq. 2), and this
+    source serves those queries from that slab.  Consequences the class
+    enforces rather than papers over:
+
+      * ``rows()`` outside the fused set raises :class:`MissingRowsError`
+        — there is no H to go back to; the caller must re-run the engine
+        with the larger request (``AnalyticsService`` does this on fused
+        cache hits whose next request needs more rows);
+      * ``dense()`` raises :class:`MissingRowsError` always: densifying
+        is precisely what the plan promised not to do.
+
+    ``nbytes`` is the whole footprint of the representation — the
+    peak-memory proxy the fused tests assert stays << dense H.
+    """
+
+    def __init__(self, row_ids, R, *, height: int, width: int):
+        self._row_ids = np.asarray(row_ids, np.int64).reshape(-1)
+        self._R = np.asarray(R)
+        if self._R.ndim < 3 or self._R.shape[-2] != self._row_ids.size:
+            raise ValueError(
+                f"R {self._R.shape} does not hold {self._row_ids.size} "
+                "rows (want (..., b, k, w))"
+            )
+        self.height = height
+        self.width = width
+
+    @property
+    def num_bins(self) -> int:
+        return self._R.shape[-3]
+
+    @property
+    def lead(self) -> tuple:
+        return tuple(self._R.shape[:-3])
+
+    @property
+    def row_ids(self) -> np.ndarray:
+        return self._row_ids
+
+    @property
+    def nbytes(self) -> int:
+        return self._R.nbytes
+
+    def rows(self, row_ids) -> np.ndarray:
+        row_ids = np.asarray(row_ids)
+        idx = np.searchsorted(self._row_ids, row_ids)
+        n = len(self._row_ids)
+        bad = (
+            (idx >= n) | (self._row_ids[np.minimum(idx, n - 1)] != row_ids)
+            if n else np.ones(row_ids.shape, bool)
+        )
+        if row_ids.size and bad.any():
+            raise MissingRowsError(
+                f"rows {row_ids[bad].tolist()} were not part of the fused "
+                "request; a fused plan computes only its declared corner "
+                "rows — re-run the engine with the new queries"
+            )
+        return self._R[..., idx, :]
+
+    def dense(self):
+        raise MissingRowsError(
+            "this H was query-fused: only the requested corner rows were "
+            "ever computed and the dense (b, h, w) H does not exist; "
+            "re-plan without query fusion to materialize it"
+        )
 
 
 class ShardedH(HSource):

@@ -92,6 +92,7 @@ class FragmentTracker:
                 f"num_bins {config.num_bins}"
             )
         self._engine = engine
+        self._step_engine = None    # lazy default engine for step_fused
 
     # -- H computation (shared by init/step/track) --------------------------
     def _compute_h(self, frames: jnp.ndarray) -> jnp.ndarray:
@@ -127,6 +128,59 @@ class FragmentTracker:
     def step(self, state: dict, frame: jnp.ndarray) -> dict:
         """Advance one frame (computes this frame's H, then votes)."""
         return self.step_on_h(state, self._compute_h(frame))
+
+    def step_fused(self, state: dict, frame) -> dict:
+        """``step`` without ever building the frame's H.
+
+        The vote's candidate-fragment rects are enumerable on the host
+        (bbox, search radius and fragment offsets are concrete between
+        frames), so the whole step is ONE engine request: a
+        ``RegionQuery`` over every candidate fragment, whose corner-row
+        union the planner sees up front — small search radii fuse
+        (``representation == "fused"``: only those rows of H are ever
+        computed), large ones fall back to the dense vote.  The rect
+        construction mirrors ``_vote`` exactly, so the returned bbox is
+        bit-identical to ``step``'s.
+
+        Single-target only (a ``(t, 4)`` state's rects depend on traced
+        per-target bboxes) — multi-target states delegate to ``step``.
+        """
+        if np.asarray(state["bbox"]).ndim != 1:
+            return self.step(state, frame)
+        cfg = self.config
+        h, w = np.shape(frame)[-2:]
+        bbox = np.asarray(state["bbox"], np.int64)
+        rad = cfg.search_radius
+        dr = np.arange(-rad, rad + 1)
+        drr, dcc = np.meshgrid(dr, dr, indexing="ij")
+        offsets = np.stack([drr, dcc, drr, dcc], axis=-1).reshape(-1, 4)
+        cand = bbox[None, :] + offsets
+        bh = int(bbox[2] - bbox[0])
+        bw = int(bbox[3] - bbox[1])
+        r0 = np.clip(cand[:, 0], 0, max(h - 1 - bh, 0))
+        c0 = np.clip(cand[:, 1], 0, max(w - 1 - bw, 0))
+        cand = np.stack([r0, c0, r0 + bh, c0 + bw], axis=-1)
+        frag = cand[:, None, :] + np.asarray(state["frag_offsets"])
+
+        from repro.core.engine import HistogramEngine, RegionQuery
+
+        engine = self._engine
+        if engine is None:
+            engine = self._step_engine
+            if engine is None:
+                engine = self._step_engine = HistogramEngine(
+                    num_bins=cfg.num_bins, method=cfg.method,
+                    backend=cfg.backend,
+                )
+        out = engine.run(frame, [RegionQuery(frag)])
+        hists = out.results[0]                               # (n, f, b)
+        sims = distances.intersection(
+            hists, jnp.asarray(state["ref_hists"])[None]
+        )
+        scores = jnp.median(sims, axis=-1)
+        new_bbox = jnp.asarray(cand, jnp.int32)[jnp.argmax(scores)]
+        return {"bbox": new_bbox, "ref_hists": state["ref_hists"],
+                "frag_offsets": state["frag_offsets"]}
 
     def step_on_h(self, state: dict, H) -> dict:
         """Advance one frame given its precomputed H — the hook for

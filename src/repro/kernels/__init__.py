@@ -1,9 +1,13 @@
 """Pallas TPU kernels for the paper's compute hot spot (the tiled scans).
 
-wf_tis.py — fused single-pass wavefront tiled scan (paper's fastest).
-cw_tis.py — two-pass tiled horizontal/vertical scan.
-ops.py    — jit'd dispatch + padding.
-ref.py    — pure-jnp oracle every kernel is tested against.
+wf_tis.py     — fused single-pass wavefront tiled scan (paper's fastest).
+cw_tis.py     — two-pass tiled horizontal/vertical scan.
+fused_rows.py — query-fused WF-TiS: emits ONLY requested corner rows,
+                full H never reaches HBM (ROADMAP item 2).
+ops.py        — jit'd dispatch + padding (incl. fused_corner_rows /
+                fused_likelihood_map).
+specs.py      — declarative KernelSpecs the contract verifier proves.
+ref.py        — pure-jnp oracle every kernel is tested against.
 """
 
 from repro.kernels.ops import integral_histogram

@@ -43,11 +43,13 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import scans
 from repro.core.binning import PAD_BIN, bin_indices
-from repro.kernels import cw_tis, wf_tis
+from repro.kernels import cw_tis, fused_rows, wf_tis
 from repro.kernels.cw_tis import cw_tis_pallas
+from repro.kernels.fused_rows import fused_rows_pallas, slot_plan
 from repro.kernels.wf_tis import wf_tis_pallas
 
 PALLAS_METHODS = {"cw_tis": cw_tis_pallas, "wf_tis": wf_tis_pallas}
@@ -56,9 +58,13 @@ PALLAS_METHODS = {"cw_tis": cw_tis_pallas, "wf_tis": wf_tis_pallas}
 # repro.analysis.kernelcheck verifies (grid order, carry happens-before,
 # output coverage, in-bounds index maps, VMEM fit).  Every PALLAS_METHODS
 # entry must have one — asserted by the kernelcheck conformance tests.
+# "fused_rows" is spec-verified too but is NOT a PALLAS_METHODS entry:
+# it is not a full-H method you can name in integral_histogram(); it is
+# the query-fused dispatch behind fused_corner_rows().
 KERNEL_SPECS = {
     "cw_tis": cw_tis.kernel_specs,
     "wf_tis": wf_tis.kernel_specs,
+    "fused_rows": fused_rows.kernel_specs,
 }
 
 
@@ -196,3 +202,166 @@ def integral_histogram(
         tile=tile, bin_block=bin_block, use_mxu=use_mxu,
         interpret=interpret, value_range=value_range,
     )
+
+
+def fused_corner_rows(
+    image: jnp.ndarray,
+    num_bins: int,
+    row_ids,
+    *,
+    method: str = "wf_tis",
+    backend: str = "auto",
+    tile: int = 128,
+    bin_block: int = 8,
+    use_mxu: bool = True,
+    interpret: bool = False,
+    value_range: int = 256,
+    carry_in: jnp.ndarray | None = None,
+    stats: dict | None = None,
+) -> jnp.ndarray:
+    """Corner rows of H for a known request — without materializing H.
+
+    The Ehsan compute-vs-store fusion (arXiv:1510.05138): when the rows a
+    request reads (Eq. 2 corner rows) are known up front, run the scan and
+    emit ONLY those rows.  Two properties distinguish this from computing
+    H and slicing:
+
+      * the full (n, b, h, w) H never exists — on the Pallas path the
+        fused kernel (kernels/fused_rows.py) writes kp rows per strip
+        straight from VMEM; on the jnp path the scan streams tile-high
+        bands so the live set is one band plus the emitted rows;
+      * compute stops at the band containing ``max(row_ids)`` — rows
+        below the last requested one contribute to nothing and are never
+        scanned.  Banded streaming of full H must touch every band.
+
+    Args:
+      image: (h, w) or (n, h, w) frame(s), same contract as
+        ``integral_histogram``.
+      row_ids: sorted unique frame rows to emit, each in ``[0, h)``.
+      stats: optional dict filled with ``bands_computed``/``bands_total``
+        (tile-high bands scanned vs in the frame), ``rows_bytes`` (the
+        result slab), ``full_h_bytes`` (what dense H would have cost) and
+        the resolved ``backend`` — the peak-memory proxy the fused tests
+        assert on.
+
+    Returns:
+      (..., num_bins, K, w) fp32 — H restricted to ``row_ids``, in
+      ``row_ids`` order.  Bit-exact against dense H sliced at the same
+      rows (all arithmetic is integer-valued fp32).
+    """
+    if image.ndim not in (2, 3):
+        raise ValueError(f"expected (h, w) or (n, h, w), got {image.shape}")
+    squeeze = image.ndim == 2
+    frames = image[None] if squeeze else image
+    n, h, w = frames.shape
+    # analysis: allow-host-sync(row ids are host-side request metadata, never device data)
+    rows = np.asarray(row_ids, np.int64).reshape(-1)
+    if rows.size == 0:
+        raise ValueError("row_ids is empty — nothing to fuse")
+    if np.any(np.diff(rows) <= 0) or rows[0] < 0 or rows[-1] >= h:
+        raise ValueError(
+            f"row_ids must be sorted unique within [0, {h})")
+    if backend not in ("auto", "pallas", "jnp"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if method not in scans.METHODS:
+        raise ValueError(f"unknown method {method!r}")
+    if backend == "pallas" and method != "wf_tis":
+        raise ValueError(
+            f"the fused kernel runs the wf_tis scan; method {method!r} "
+            "has no fused Pallas path — use backend='auto' or 'jnp'"
+        )
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() and method == "wf_tis" else "jnp"
+    if carry_in is not None:
+        want = frames.shape[:-2] + (num_bins, w)
+        got = carry_in[None] if squeeze and carry_in.ndim == 2 else carry_in
+        if got.shape != want:
+            raise ValueError(
+                f"carry_in shape {carry_in.shape} incompatible with "
+                f"{want} (frames, num_bins, width)"
+            )
+        carry_in = got
+
+    # Early exit: nothing below the last requested row feeds any output.
+    bands_total = -(-h // tile)
+    bands_needed = int(rows[-1]) // tile + 1
+    h_cut = min(h, bands_needed * tile)
+    frames = frames[:, :h_cut]
+
+    if backend == "pallas":
+        idx = bin_indices(frames, num_bins, value_range)
+        idx = _pad_to(idx, tile, tile, PAD_BIN)
+        nb_pad = num_bins + (-num_bins) % bin_block
+        slots, _, pos = slot_plan(rows, tile, idx.shape[-2])
+        carry = None
+        if carry_in is not None:
+            pad = [(0, 0), (0, nb_pad - num_bins), (0, (-w) % tile)]
+            carry = jnp.pad(carry_in.astype(jnp.float32), pad)
+        out = fused_rows_pallas(
+            idx, nb_pad, slots, tile=tile, bin_block=bin_block,
+            use_mxu=use_mxu, interpret=interpret, carry=carry,
+        )
+        R = out[:, :num_bins, pos, :w]
+    else:
+        # Stream tile-high bands through the scan, carry threaded between
+        # dispatches; keep only the requested rows of each band.
+        carry = carry_in
+        kept = []
+        for b in range(bands_needed):
+            band = frames[:, b * tile:(b + 1) * tile]
+            Hb = _integral_histogram_jit(
+                band, carry, num_bins, method=method, backend="jnp",
+                tile=tile, bin_block=bin_block, use_mxu=use_mxu,
+                interpret=interpret, value_range=value_range,
+            )
+            carry = Hb[..., -1, :]
+            local = rows[(rows >= b * tile) & (rows < (b + 1) * tile)]
+            if local.size:
+                kept.append(Hb[..., local - b * tile, :])
+        R = jnp.concatenate(kept, axis=-2)
+
+    if stats is not None:
+        stats.update(
+            bands_computed=bands_needed,
+            bands_total=bands_total,
+            rows_bytes=n * num_bins * rows.size * w * 4,
+            full_h_bytes=n * num_bins * h * w * 4,
+            backend=backend,
+        )
+    return R[0] if squeeze else R
+
+
+def fused_likelihood_map(
+    image: jnp.ndarray,
+    model: jnp.ndarray,
+    metric,
+    *,
+    window: tuple[int, int],
+    stride: int = 1,
+    num_bins: int | None = None,
+    stats: dict | None = None,
+    **kwargs,
+):
+    """Likelihood-map tiles straight off the fused scan — the second
+    output mode of the query-fused path.
+
+    Computes the two corner-row lattices the (window, stride) sliding
+    grid reads, fuses them out of the scan with ``fused_corner_rows``,
+    and scores every window against ``model`` via the shared
+    row-difference evaluator.  Dense H is never built.
+
+    Returns the same (..., out_h, out_w) map as
+    ``HSource.likelihood_map``.
+    """
+    from repro.core.hsource import FusedRowsH  # deferred: hsource imports us
+
+    nb = int(model.shape[-1]) if num_bins is None else num_bins
+    h, w = image.shape[-2:]
+    probe = FusedRowsH(row_ids=(0,), R=np.zeros((nb, 1, w), np.float32),
+                       height=h, width=w)
+    _, _, bot, top = probe._window_lattices(window, stride)
+    rows = np.unique(np.concatenate([bot, top[top >= 0]]))
+    R = fused_corner_rows(image, nb, rows, stats=stats, **kwargs)
+    # analysis: allow-host-sync(FusedRowsH stores host arrays by protocol — the K-row slab pull IS the result readback)
+    source = FusedRowsH(row_ids=rows, R=np.asarray(R), height=h, width=w)
+    return source.likelihood_map(model, window, metric, stride)

@@ -97,6 +97,27 @@ class KernelGeometry:
 
 
 @dataclasses.dataclass(frozen=True)
+class FusedRowsGeometry(KernelGeometry):
+    """Launch geometry of the query-fused kernel (kernels/fused_rows.py).
+
+    ``kp`` is the per-strip emission width: the padded count of row
+    slots each tile-row strip may emit (the maximum corner rows any
+    strip of the request carries, rounded up to a sublane multiple of
+    8).  The fused output is ``(n, nb_pad, nth * kp, w_pad)`` — never
+    the full H."""
+
+    kp: int = 8
+
+    def canonical(self, max_blocks: int = 3) -> "FusedRowsGeometry":
+        base = super().canonical(max_blocks)
+        return FusedRowsGeometry(
+            n=base.n, h=base.h, w=base.w, num_bins=base.num_bins,
+            tile=base.tile, bin_block=base.bin_block,
+            kp=min(self.kp, self.tile),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class Operand:
     """One blocked ``pallas_call`` operand (an in_spec or out_spec).
 

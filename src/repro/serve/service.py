@@ -102,6 +102,25 @@ class _Pending:
 class AnalyticsService:
     """Serve ``(frame_ref, query)`` requests against one engine.
 
+    Two requests on the same frame coalesce into ONE engine run (and,
+    when their corner-row union is small, the planner fuses them into
+    the scan so H is never stored):
+
+    >>> import numpy as np
+    >>> from repro.core.engine import HistogramEngine, RegionQuery
+    >>> frames = {"f0": np.arange(64, dtype=np.uint8).reshape(8, 8) % 4}
+    >>> svc = AnalyticsService(
+    ...     HistogramEngine(num_bins=4, value_range=4, backend="jnp"),
+    ...     frames)
+    >>> out = svc.process([("f0", RegionQuery([[0, 0, 7, 7]])),
+    ...                    ("f0", RegionQuery([[0, 0, 3, 7]]))])
+    >>> [float(v) for v in np.asarray(out[0]).ravel()]
+    [16.0, 16.0, 16.0, 16.0]
+    >>> svc.stats.engine_runs       # both queries rode one engine run
+    1
+    >>> svc._engine.last_plan.representation
+    'fused'
+
     Args:
       engine: a ``HistogramEngine`` — plans/computes/queries; the
         service never touches representations directly.
@@ -170,7 +189,7 @@ class AnalyticsService:
         """Answer every request of one frame group; returns results in
         group order."""
         from repro.core.engine import prefetch_rows
-        from repro.core.hsource import BandedH
+        from repro.core.hsource import BandedH, MissingRowsError
 
         queries = [p.query for p in group]
         source, results, hit = self._source_for(frame_ref, queries)
@@ -181,7 +200,22 @@ class AnalyticsService:
             target = source
             if len(queries) > 1 and isinstance(source, BandedH):
                 target = prefetch_rows(source, queries) or source
-            results = [q.apply(target) for q in queries]
+            try:
+                results = [q.apply(target) for q in queries]
+            except MissingRowsError:
+                # A fused cache entry holds ONLY its own request's corner
+                # rows; a hit that reads outside that set has no H to
+                # fall back on.  Re-run the engine (it re-plans with the
+                # new row union — fused again if still small) and refresh
+                # the cache.  Not a cache hit.
+                hit = False
+                out = self._engine.run(self._resolve(frame_ref), queries)
+                results = out.results
+                with self._lock:
+                    self.stats.engine_runs += 1
+                    if self.cache_size:
+                        self._cache[frame_ref] = out.source
+                        self._cache.move_to_end(frame_ref)
         with self._lock:
             self.stats.requests += len(group)
             if hit:

@@ -101,7 +101,9 @@ def test_banded_engine_cache_hits_replay_the_stream(store):
     budget = 4 * 8 * 24 * 8             # 8-row bands for 32x24 @ 8 bins
     eng, calls = _probed_engine(memory_budget_bytes=budget)
     svc = AnalyticsService(eng, store, cache_size=2)
-    qs = [RegionQuery(RECTS), SlidingWindowQuery((8, 8), 8)]
+    # stride 4 keeps the corner-row union above the query-fusion bound
+    # (h // 4 rows) so the planner stays banded rather than fusing.
+    qs = [RegionQuery(RECTS), SlidingWindowQuery((8, 8), 4)]
     first = svc.process([(3, q) for q in qs])
     assert eng.last_plan.representation == "banded"
     again = svc.process([(3, q) for q in qs])       # cache hit, 2 queries
