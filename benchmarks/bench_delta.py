@@ -1,0 +1,119 @@
+"""Incremental video-delta H updates: fps vs dirty fraction (ISSUE 9).
+
+A fixed-camera low-motion stream rewrites a contiguous block of rows per
+frame; everything else is identical.  The incremental path
+(core/delta.py) recomputes only the dirty bands and carry-corrects the
+clean slabs below, so per-frame cost scales with the dirty fraction —
+the compute-vs-reuse tradeoff of Ehsan et al. applied across time.  The
+foil recomputes every frame's H from scratch through the same engine.
+
+Reported per dirty fraction: end-to-end fps for both paths (the
+incremental stream pays ONE full compute to seed the chain), the
+speedup, and how many of the stream's plans actually took the update
+(high-motion rows fall back — the 0.50 row shows the threshold working).
+
+Outside smoke mode the 10%-dirty row must clear 3x end-to-end — the
+acceptance floor for this path; parity of the final H is asserted on
+every row regardless.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import fmt_table
+from repro.core.engine import HistogramEngine
+
+
+def _stream(h: int, w: int, n: int, dirty_rows: int, seed: int):
+    """n frames; each rewrites `dirty_rows` rows of its predecessor at a
+    random position (repro.data.video_frames regenerates whole frames, so
+    low-motion streams are built here)."""
+    rng = np.random.default_rng(seed)
+    frames = [rng.integers(0, 256, (h, w), dtype=np.uint8)]
+    for _ in range(n - 1):
+        nxt = frames[-1].copy()
+        if dirty_rows:
+            r = int(rng.integers(0, h - dirty_rows + 1))
+            nxt[r:r + dirty_rows] = rng.integers(
+                0, 256, (dirty_rows, w), dtype=np.uint8)
+        frames.append(nxt)
+    return frames
+
+
+def _best_of(fn, iters: int) -> float:
+    fn()                                # warm the compile caches
+    if common.SMOKE:
+        iters = 1
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(quick: bool = False) -> str:
+    if common.SMOKE:
+        h, w, bins, n = 240, 320, 16, 4
+        fractions = (0.10,)
+    elif quick:
+        h, w, bins, n = 480, 640, 32, 12
+        fractions = (0.10, 0.50)
+    else:
+        h, w, bins, n = 480, 640, 32, 24
+        fractions = (0.02, 0.10, 0.25, 0.50)
+    iters = 2 if quick else 3
+    eng = HistogramEngine(bins, backend="jnp")
+
+    rows = []
+    for df in fractions:
+        dirty_rows = max(1, int(df * h))
+        frames = _stream(h, w, n, dirty_rows, seed=3)
+        last = {}
+
+        def full_pass():
+            outs = [eng.run(f).source.H for f in frames]
+            jax.block_until_ready(outs)
+            last["full"] = outs[-1]
+
+        def inc_pass():
+            outs, prev, updated = [], None, 0
+            for f in frames:
+                out = eng.run(f, prev=prev)
+                updated += bool(out.plan.incremental)
+                outs.append(out.source.H)
+                prev = (f, out.source)
+            jax.block_until_ready(outs)
+            last["inc"] = outs[-1]
+            last["updated"] = updated
+
+        t_full = _best_of(full_pass, iters)
+        t_inc = _best_of(inc_pass, iters)
+        for label, t in (("full", t_full), ("inc", t_inc)):
+            common.TIMINGS.append({
+                "median_s": t, "min_s": t, "iters": iters,
+                "label": f"delta_{label}_df{int(100 * df):02d}",
+            })
+        # bit-exact: the delta-updated chain ends on the same H
+        np.testing.assert_array_equal(np.asarray(last["inc"]),
+                                      np.asarray(last["full"]))
+        speedup = t_full / t_inc
+        rows.append([
+            f"{df:.2f}", f"{last['updated']}/{n}",
+            f"{n / t_full:.1f}", f"{n / t_inc:.1f}", f"{speedup:.2f}x",
+        ])
+        if not common.SMOKE and abs(df - 0.10) < 1e-9:
+            assert speedup >= 3.0, (
+                f"incremental path {speedup:.2f}x at 10% dirty — "
+                "below the 3x acceptance floor")
+    return fmt_table(
+        ["dirty", "updated", "full fps", "inc fps", "speedup"], rows)
+
+
+if __name__ == "__main__":
+    print(run())

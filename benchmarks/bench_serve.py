@@ -12,7 +12,9 @@ on few recent frames.  Two sweeps:
     computation entirely on a hit.
 
 Reported: requests/sec, cache hit rate, coalesced share, engine runs per
-request, p95 latency.
+request, the share of runs served by an incremental video-delta update
+(the hot frames here are regenerated independently, so the update ratio
+is 0 unless the store is a low-motion stream), p95 latency.
 """
 
 from __future__ import annotations
@@ -104,11 +106,12 @@ def run(quick: bool = False) -> str:
                 f"{100 * s['cache_hit_rate']:.0f}%",
                 f"{100 * s['coalesced'] / max(s['requests'], 1):.0f}%",
                 f"{s['engine_runs'] / max(s['requests'], 1):.2f}",
+                f"{100 * s['update_ratio']:.0f}%",
                 f"{1e3 * s['latency_p95_s']:.1f}",
             ])
     return fmt_table(
         ["depth", "cache", "req/s", "hit rate", "coalesced",
-         "runs/req", "p95 ms"],
+         "runs/req", "updated", "p95 ms"],
         rows,
     )
 

@@ -41,6 +41,8 @@ BENCHES = [
      "cache"),
     ("fused", "benchmarks.bench_fused",
      "ISSUE 8 — query-fused corner rows vs banded streaming"),
+    ("delta", "benchmarks.bench_delta",
+     "ISSUE 9 — incremental video-delta H updates vs full recompute"),
     ("multidevice", "benchmarks.bench_multidevice",
      "paper Fig. 16/17 — multi-device bin/spatial sharding"),
     ("speedup", "benchmarks.bench_speedup",

@@ -11,8 +11,10 @@ visible instead of rotting as unread artifacts.
 Exit code is always 0 on a successful comparison (smoke timings are
 single-iteration and noisy — the table *surfaces* regressions, marking
 anything slower than ``threshold``x with a warning row; gating merges on
-smoke noise would only train people to ignore CI).  Exit 2 on unreadable
-input.
+smoke noise would only train people to ignore CI).  Exit 2 on an
+unreadable NEW record.  A missing, empty, or unparseable OLD record is
+NOT an error — the first run of a fresh cache has no predecessor, so the
+new record seeds the trajectory (every row "new") and the exit is 0.
 """
 
 from __future__ import annotations
@@ -91,14 +93,26 @@ def main(argv=None) -> int:
                     help="write the markdown here (default: stdout)")
     args = ap.parse_args(argv)
     try:
-        with open(args.old) as f:
-            old = json.load(f)
         with open(args.new) as f:
             new = json.load(f)
     except (OSError, json.JSONDecodeError) as e:
-        print(f"bench_compare: cannot read records: {e}", file=sys.stderr)
+        print(f"bench_compare: cannot read new record: {e}", file=sys.stderr)
         return 2
+    seeded = False
+    try:
+        with open(args.old) as f:
+            old = json.load(f)
+        if not isinstance(old, dict):
+            raise json.JSONDecodeError("not a JSON object", "", 0)
+    except (OSError, json.JSONDecodeError) as e:
+        # First run on a fresh cache: seed the trajectory, don't fail CI.
+        print(f"bench_compare: no prior record ({e}); seeding trajectory",
+              file=sys.stderr)
+        old, seeded = {"benches": {}}, True
     table, _ = compare(old, new, threshold=args.threshold)
+    if seeded:
+        table += ("\n\n*(no readable prior record — this run seeds the "
+                  "trajectory)*")
     if args.output:
         with open(args.output, "w") as f:
             f.write(table + "\n")

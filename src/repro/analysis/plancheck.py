@@ -27,7 +27,11 @@ FLOPs, no device memory) plus the planner's own metadata.
     enforced at query time;
   * **query-validity** — when queries are supplied: each query's
     largest region/window area fits the plan's exact-count bound
-    (``uint16``: 65535 px of modular arithmetic).
+    (``uint16``: 65535 px of modular arithmetic);
+  * **incremental** — video-delta plans only: the dirty-fraction
+    decision input is present and in range, the representation can
+    update in place, and the line prices the recomputed-vs-reused
+    bytes per frame.
 
 The structural verdict is cached per plan (plans are frozen,
 hashable dataclasses), so ``HistogramEngine.validate`` — run before
@@ -353,6 +357,35 @@ def _check_count_validity(plan) -> PlanCheck:
         name, "ok", f"{px}-px frame within fp32 exact range")
 
 
+def _check_incremental(plan) -> PlanCheck:
+    """Price and validate an incremental (video-delta) plan: the
+    dirty-fraction decision input must be present and sane, and the
+    representation must expose the ``update_bands`` hook (fused plans
+    never store H; sharded plans re-shard per frame)."""
+    name = "incremental"
+    s = plan.spec
+    df = s.dirty_fraction
+    if df is None:
+        return PlanCheck(
+            name, "fail",
+            "incremental plan without a dirty_fraction — nothing measured "
+            "the frame delta that justifies an update")
+    if not 0.0 <= df <= 1.0:
+        return PlanCheck(
+            name, "fail", f"dirty_fraction {df} outside [0, 1]")
+    if plan.representation in ("fused", "sharded"):
+        return PlanCheck(
+            name, "fail",
+            f"{plan.representation!r} representation cannot update in "
+            "place (no cached H to repair)")
+    per_frame = s.per_frame_h_bytes
+    recomputed = int(round(df * per_frame))
+    return PlanCheck(
+        name, "ok",
+        f"dirty fraction {df:.2f}: recompute ~{recomputed} B/frame, "
+        f"reuse ~{per_frame - recomputed} B/frame of cached H")
+
+
 def _query_area(query) -> int | None:
     """Largest region/window pixel area a query touches, else None."""
     rects = getattr(query, "rects", None)
@@ -446,7 +479,7 @@ def _kernel_checks(plan) -> tuple[PlanCheck, ...]:
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=256)
 def _structural_checks(plan) -> tuple[PlanCheck, ...]:
-    return (
+    checks = (
         _check_representation(plan),
         _check_h_shape(plan),
         _check_carry_chain(plan),
@@ -454,6 +487,11 @@ def _structural_checks(plan) -> tuple[PlanCheck, ...]:
         _check_vmem_fit(plan),
         _check_count_validity(plan),
     )
+    # Only incremental plans carry the extra line, so rendered verdicts
+    # for every pre-existing plan stay byte-identical.
+    if getattr(plan, "incremental", False):
+        checks = checks + (_check_incremental(plan),)
+    return checks
 
 
 def check_plan(plan, queries=(), *, deep: bool = False) -> PlanVerdict:

@@ -294,10 +294,19 @@ class SpilledIH(HSource):
     storage: str
     spans: tuple[tuple[int, int], ...]
     bands: list
+    # Per-band true-valued fp32 bottom rows (..., b, w) — the carry
+    # chain the incremental video path (core/delta.py) needs: integer
+    # policies store H modularly, so the real carries cannot be
+    # recovered from ``bands`` and are retained at spill time instead.
+    # ``None`` on spills predating carry retention (not updatable).
+    carries: list | None = None
 
     @property
     def nbytes(self) -> int:
-        return sum(b.nbytes for b in self.bands)
+        total = sum(b.nbytes for b in self.bands)
+        if self.carries is not None:
+            total += sum(c.nbytes for c in self.carries)
+        return total
 
     @property
     def exact_region_bound(self) -> int:
@@ -333,6 +342,20 @@ class SpilledIH(HSource):
     def dense(self):
         return jnp.asarray(self.assemble())
 
+    def update_bands(self, next_frame, report, *, recompute,
+                     apply_fn=None) -> "SpilledIH":
+        """The incremental-video hook (core/delta.py): a new SpilledIH
+        for ``next_frame`` in the same storage policy — dirty bands
+        recomputed and re-spilled, clean bands below corrected in the
+        policy's own modular arithmetic (``apply_fn`` is accepted for
+        hook-signature uniformity; the spill update is host-side)."""
+        from repro.core import delta as delta_mod
+
+        del apply_fn
+        return delta_mod.update_spilled_ih(
+            self, next_frame, report, recompute=recompute,
+        )
+
 
 def spill_banded_ih(
     image, num_bins: int, *, storage: str = "float32", **kwargs
@@ -342,9 +365,13 @@ def spill_banded_ih(
     h, w = image.shape[-2:]
     validate_storage_policy(storage, h, w)
     dtype, _ = STORAGE_POLICIES[storage]
-    spans, bands = [], []
+    spans, bands, carries = [], [], []
     for band in iter_banded_ih(image, num_bins, **kwargs):
         arr = np.asarray(band.H)
+        # The true-valued bottom row, BEFORE any storage cast — the
+        # carry chain the incremental update path (core/delta.py)
+        # threads through clean bands.
+        carries.append(arr[..., -1, :].astype(np.float32))
         if dtype is not np.float32:
             # Counts are exact integers in fp32 here (validated above);
             # reduce the width by an explicit modular cast.
@@ -357,7 +384,7 @@ def spill_banded_ih(
     return SpilledIH(
         num_bins=num_bins, height=h, width=w,
         lead=tuple(image.shape[:-2]), storage=storage,
-        spans=tuple(spans), bands=bands,
+        spans=tuple(spans), bands=bands, carries=carries,
     )
 
 

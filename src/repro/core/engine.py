@@ -40,9 +40,11 @@ import jax
 import numpy as np
 
 from repro.core import autotune
+from repro.core import delta as delta_mod
 from repro.core.bands import (
     BandPlan,
     STORAGE_POLICIES,
+    SpilledIH,
     plan_bands,
     validate_storage_policy,
 )
@@ -69,6 +71,11 @@ _FUSE_ROW_FRACTION = 4
 # an LLC's worth, the crossover between dispatch-bound and cache-bound
 # regimes measured in benchmarks/bench_batched.py.
 _AUTO_BATCH_BYTES = 4 << 20
+
+# Dirty-row fraction above which an incremental update of a cached
+# predecessor H stops paying and plan() recomputes (tunable per
+# geometry via the "delta_threshold" priors key).
+_DELTA_DIRTY_THRESHOLD = delta_mod.DEFAULT_DIRTY_THRESHOLD
 
 
 class PlanValidationError(ValueError):
@@ -129,6 +136,12 @@ class WorkloadSpec:
     # the scan and never store H.  engine.run() fills it automatically
     # from the queries' needed_rows declarations.
     query_rows: tuple[int, ...] | None = None
+    # Fraction of frame rows in dirty bands vs a cached predecessor H
+    # (core/delta.py diff_bands), or None when no predecessor is
+    # available.  Small enough -> plan() chooses the incremental path:
+    # update the cached H instead of recomputing.  engine.run(prev=...)
+    # fills it automatically.
+    dirty_fraction: float | None = None
 
     @property
     def per_frame_h_bytes(self) -> int:
@@ -160,6 +173,7 @@ class ExecutionPlan:
     sharding: str | None                # None | "bin" | "spatial"
     microbatch_mode: str = "fixed"      # "fixed" | "adaptive"
     tuned: str | None = None            # autotune priors key, if applied
+    incremental: bool = False           # update a cached predecessor H
 
     def explain(self, verdict=None) -> str:
         """Human-readable plan rationale (golden-snapshot tested).
@@ -179,6 +193,14 @@ class ExecutionPlan:
             f"({per_frame / 2**20:.1f} MiB fp32)",
             f"  representation  : {self.representation}",
         ]
+        if self.incremental:
+            df = s.dirty_fraction or 0.0
+            recomputed = int(round(df * per_frame))
+            lines.append(
+                f"  incremental     : update — dirty fraction {df:.2f} "
+                f"within threshold; recompute ~{recomputed} B/frame, "
+                f"reuse ~{per_frame - recomputed} B/frame of cached H"
+            )
         if s.query_rows is not None:
             k = len(s.query_rows)
             nf = 1 if s.num_frames is None else s.num_frames
@@ -314,7 +336,25 @@ def plan(spec: WorkloadSpec) -> ExecutionPlan:
         bin_block = int(prior.get("bin_block", bin_block))
         tuned = autotune.config_key(spec.height, spec.width, spec.num_bins)
 
-    if spec.query_rows is not None:
+    # Decision "incremental" (the video-delta path, core/delta.py): a
+    # cached predecessor H exists and few enough rows changed that
+    # updating it (recompute dirty bands, carry-correct clean slabs
+    # below) beats a full recompute.  The threshold is tunable per
+    # geometry via the priors file ("delta_threshold").  Fusion is
+    # skipped for incremental plans — it never stores H, so there is
+    # nothing to update next frame; mesh plans reassemble cross-device
+    # and are recomputed whole.
+    incremental = False
+    if spec.dirty_fraction is not None:
+        if not 0.0 <= spec.dirty_fraction <= 1.0:
+            raise ValueError(
+                f"dirty_fraction must be within [0, 1], got "
+                f"{spec.dirty_fraction}")
+        threshold = float(
+            (prior or {}).get("delta_threshold", _DELTA_DIRTY_THRESHOLD))
+        incremental = spec.mesh is None and spec.dirty_fraction <= threshold
+
+    if spec.query_rows is not None and not incremental:
         rows = spec.query_rows
         k = len(rows)
         if not all(
@@ -438,7 +478,7 @@ def plan(spec: WorkloadSpec) -> ExecutionPlan:
         storage=spec.storage, sharding=None,
         microbatch_mode=("adaptive" if spec.adaptive_microbatch
                          else "fixed"),
-        tuned=tuned,
+        tuned=tuned, incremental=incremental,
     )
 
 
@@ -815,7 +855,92 @@ class HistogramEngine:
 
         return DenseH(integral_histogram(frames, self.num_bins, **kw))
 
-    def run(self, frames, queries: Iterable = ()) -> EngineResult:
+    # -- incremental video path (core/delta.py) -----------------------------
+    def _delta_spans(self, spec: WorkloadSpec, prev_source: HSource):
+        """The band granularity dirty detection and update share: a
+        spilled source's own spans, the spec's budget bands otherwise,
+        tile-high bands for a dense plan (no bands of its own)."""
+        spans = getattr(prev_source, "spans", None)
+        if spans is not None:
+            return tuple(spans)
+        nf = spec.num_frames
+        band_frames = 1 if nf is None else nf
+        if spec.memory_budget_bytes is not None:
+            bp = plan_bands(
+                spec.height, spec.width, spec.num_bins,
+                memory_budget_bytes=spec.memory_budget_bytes,
+                num_frames=band_frames,
+            )
+        else:
+            # Dense plans have no bands of their own: detect finely (the
+            # dense walk merges adjacent spans back into maximal runs, so
+            # fine detection costs dispatches nothing and recomputes less)
+            # while keeping at least ~8 bands on small frames.
+            band_h = max(1, min(16, -(-spec.height // 8)))
+            bp = plan_bands(spec.height, spec.width, spec.num_bins,
+                            band_h=band_h)
+        return bp.spans
+
+    def _delta_report(self, frames, prev_frame, prev_source: HSource,
+                      spec: WorkloadSpec):
+        """Dirty-band detection against a cached predecessor, or None
+        when the predecessor cannot seed an update (geometry/bin/shape
+        mismatch, mesh plan, or a representation without the hook)."""
+        if self.mesh is not None:
+            return None
+        if not hasattr(prev_source, "update_bands"):
+            return None
+        if np.shape(prev_frame) != np.shape(frames):
+            return None
+        if (prev_source.height, prev_source.width) != (spec.height,
+                                                       spec.width):
+            return None
+        if prev_source.num_bins != self.num_bins:
+            return None
+        return delta_mod.diff_bands(
+            prev_frame, frames, self._delta_spans(spec, prev_source))
+
+    def _updatable(self, prev_source: HSource, p: ExecutionPlan) -> bool:
+        """Does the cached representation match the plan well enough to
+        take the update in place?  (Policy mismatch -> full recompute.)"""
+        if p.representation == "dense":
+            return isinstance(prev_source, DenseH)
+        if p.representation == "banded":
+            return (isinstance(prev_source, BandedH)
+                    and prev_source._factory is not None)
+        if p.representation == "spilled":
+            return (isinstance(prev_source, SpilledIH)
+                    and prev_source.storage == p.storage
+                    and prev_source.carries is not None)
+        return False
+
+    def _update(self, prev_source: HSource, frames, report,
+                p: ExecutionPlan) -> HSource:
+        """Drive the cached source's ``update_bands`` hook with the
+        plan's kernel dispatch and the delta_apply slab repair."""
+        from repro.kernels import ops
+
+        kw = self._kernel_kwargs(p)
+
+        def recompute(band_rows, carry):
+            return ops.integral_histogram(
+                band_rows, self.num_bins, carry_in=carry, **kw)
+
+        # Pallas plans route the broadcast correction through the
+        # delta_apply kernel; jnp plans leave apply_fn unset so the
+        # dense walk takes its fused single-dispatch assembly.
+        apply_fn = None
+        if p.backend == "pallas":
+            def apply_fn(slab, d):
+                return ops.delta_apply(
+                    slab, d, backend=p.backend, tile=p.tile,
+                    bin_block=p.bin_block, interpret=p.spec.interpret)
+
+        return prev_source.update_bands(
+            frames, report, recompute=recompute, apply_fn=apply_fn)
+
+    def run(self, frames, queries: Iterable = (), *,
+            prev=None) -> EngineResult:
         """Plan, compute, and answer ``queries`` in order.
 
         The queries shape the plan: their declared corner-row union goes
@@ -825,6 +950,15 @@ class HistogramEngine:
         plan share ONE stream: the union of every query's corner rows is
         fetched in a single ``rows()`` pass (``prefetch_rows``) instead
         of re-running the banded kernel per query.
+
+        ``prev=(prev_frame, prev_source)`` offers a predecessor frame
+        and its H (an ``HSource`` or ``EngineResult``) to the planner:
+        when few enough rows changed (core/delta.py), the plan goes
+        ``incremental`` and the cached H is *updated* — only dirty
+        bands recomputed, clean slabs below carry-corrected — instead
+        of rebuilt, bit-exactly.  High motion, geometry/policy
+        mismatches, and non-updatable representations (fused, sharded,
+        single-shot banded) fall back to a full recompute.
 
         >>> import numpy as np
         >>> from repro.core.engine import HistogramEngine, RegionQuery
@@ -842,10 +976,31 @@ class HistogramEngine:
         rows = _declared_rows(queries, spec.height, spec.width)
         if rows is not None:
             spec = dataclasses.replace(spec, query_rows=rows)
+
+        prev_frame = prev_source = report = None
+        if prev is not None:
+            prev_frame, prev_source = prev
+            if isinstance(prev_source, EngineResult):
+                prev_source = prev_source.source
+            report = self._delta_report(frames, prev_frame, prev_source,
+                                        spec)
+            if report is not None:
+                spec = dataclasses.replace(
+                    spec, dirty_fraction=report.dirty_fraction)
+
         p = plan(spec)
+        if p.incremental and not self._updatable(prev_source, p):
+            # The cached representation cannot take the update (policy
+            # mismatch, single-shot stream, ...): re-plan for a full
+            # recompute rather than fail.
+            spec = dataclasses.replace(spec, dirty_fraction=None)
+            p = plan(spec)
         self.last_plan = p
         self._validate_or_raise(p, queries)
-        source = self.compute(frames, p)
+        if p.incremental:
+            source = self._update(prev_source, frames, report, p)
+        else:
+            source = self.compute(frames, p)
         target = source
         if len(queries) > 1 and isinstance(source, BandedH):
             target = prefetch_rows(source, queries) or source

@@ -70,6 +70,18 @@ class HSource(abc.ABC):
         2**24 compute-exactness validation)."""
         return None
 
+    @property
+    def nbytes(self) -> int:
+        """Size estimate for cache accounting (``AnalyticsService``'s
+        byte-aware eviction).  The default is the planner's estimate —
+        the full fp32 H footprint — which is exact for a materialized
+        dense H and deliberately conservative for streamed/factory
+        sources (what a replay can transiently pin); representations
+        with a real resident footprint (SpilledIH, FusedRowsH)
+        override it."""
+        nlead = int(np.prod(self.lead, dtype=np.int64) or 1)
+        return 4 * nlead * self.num_bins * self.height * self.width
+
     # -- the one representation primitive -----------------------------------
     @abc.abstractmethod
     def rows(self, row_ids) -> np.ndarray:
@@ -267,11 +279,29 @@ class DenseH(HSource):
     def lead(self) -> tuple:
         return tuple(self.H.shape[:-3])
 
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.H.shape, dtype=np.int64)) \
+            * self.H.dtype.itemsize
+
     def rows(self, row_ids) -> np.ndarray:
         return np.asarray(self.H[..., np.asarray(row_ids), :])
 
     def dense(self):
         return self.H
+
+    def update_bands(self, next_frame, report, *, recompute,
+                     apply_fn=None) -> "DenseH":
+        """The incremental-video hook (core/delta.py): a new DenseH for
+        ``next_frame``, recomputing only the report's dirty bands and
+        carry-correcting the clean slabs below — bit-exact vs a full
+        recompute."""
+        from repro.core import delta as delta_mod
+
+        return DenseH(delta_mod.update_dense_ih(
+            self.H, next_frame, report,
+            recompute=recompute, apply_fn=apply_fn,
+        ))
 
     def region_histogram(self, rects) -> jnp.ndarray:
         return rq.region_histogram(self.H, jnp.asarray(rects))
@@ -382,6 +412,26 @@ class BandedH(HSource):
         never ``jnp.concatenate`` over possibly-sharded device bands)."""
         return jnp.asarray(np.concatenate(
             [np.asarray(band.H) for band in self._take_stream()], axis=-2,
+        ))
+
+    def update_bands(self, next_frame, report, *, recompute,
+                     apply_fn=None) -> "BandedH":
+        """The incremental-video hook (core/delta.py): a new replayable
+        BandedH whose stream replays this one's bands, recomputing dirty
+        bands from ``next_frame`` and carry-correcting clean bands below.
+        Only factory-backed (replayable) sources can be updated — a
+        single-shot iterator has no stream left to replay."""
+        from repro.core import delta as delta_mod
+
+        if self._factory is None:
+            raise RuntimeError(
+                "cannot update a single-shot BandedH — only factory-"
+                "backed (replayable) band streams support incremental "
+                "updates; the engine falls back to a full recompute"
+            )
+        return BandedH(delta_mod.update_banded_factory(
+            self._factory, next_frame, report,
+            recompute=recompute, apply_fn=apply_fn,
         ))
 
     # -- stats / warnings ----------------------------------------------------

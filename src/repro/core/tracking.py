@@ -199,7 +199,8 @@ class FragmentTracker:
     def _step_on_h_jit(self, state: dict, H: jnp.ndarray) -> dict:
         return self._step_state(state, H)
 
-    def track(self, state: dict, frames, *, batch_size: int | str = "auto"):
+    def track(self, state: dict, frames, *, batch_size: int | str = "auto",
+              incremental: bool = False):
         """Track through a whole clip.
 
         Args:
@@ -211,6 +212,13 @@ class FragmentTracker:
             per-frame H footprint, exactly like
             ``IntegralHistogram.map_frames``.  A ragged final chunk
             costs one extra compile.
+          incremental: thread each frame's H off its predecessor's
+            through the engine's video-delta path (core/delta.py): a
+            host loop hands ``prev=(frame_t, source_t)`` to
+            ``HistogramEngine.run`` so low-motion clips *update* the
+            cached H instead of recomputing it — bit-exact, so the
+            returned boxes match the batched path.  Ignores
+            ``batch_size`` (the chain is inherently sequential).
 
         The clip loop is ``runtime.FrameRuntime`` with the tracker state
         as the carry threaded between chunk dispatches (an array clip is
@@ -231,6 +239,8 @@ class FragmentTracker:
             raise ValueError(
                 f'batch_size must be a positive int or "auto", '
                 f"got {batch_size!r}")
+        if incremental:
+            return self._track_incremental(state, frames)
 
         def empty():
             return state, jnp.zeros((0,) + state["bbox"].shape, jnp.int32)
@@ -273,6 +283,34 @@ class FragmentTracker:
         if not boxes:
             return empty()
         return state, jnp.concatenate(boxes, axis=0)
+
+    def _track_incremental(self, state: dict, frames):
+        """The video-delta clip loop: each frame's H is offered its
+        predecessor's ``(frame, source)`` pair, so the engine updates
+        dirty bands in place when motion is low (``track``'s
+        ``incremental=True``).  Sequential by construction — the H of
+        frame t seeds frame t+1."""
+        from repro.core.engine import HistogramEngine
+
+        engine = self._engine
+        if engine is None:
+            engine = self._step_engine
+            if engine is None:
+                cfg = self.config
+                engine = self._step_engine = HistogramEngine(
+                    num_bins=cfg.num_bins, method=cfg.method,
+                    backend=cfg.backend,
+                )
+        boxes = []
+        prev = None
+        for frame in frames:
+            out = engine.run(frame, prev=prev)
+            state = self.step_on_h(state, out.source)
+            boxes.append(state["bbox"])
+            prev = (frame, out.source)
+        if not boxes:
+            return state, jnp.zeros((0,) + state["bbox"].shape, jnp.int32)
+        return state, jnp.stack(boxes, axis=0)
 
     # -- internals ----------------------------------------------------------
     @functools.partial(jax.jit, static_argnums=(0,))

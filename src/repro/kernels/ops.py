@@ -47,8 +47,10 @@ import numpy as np
 
 from repro.core import scans
 from repro.core.binning import PAD_BIN, bin_indices
-from repro.kernels import cw_tis, fused_rows, wf_tis
+from repro.kernels import cw_tis, delta_apply as delta_apply_mod, \
+    fused_rows, wf_tis
 from repro.kernels.cw_tis import cw_tis_pallas
+from repro.kernels.delta_apply import delta_apply_pallas
 from repro.kernels.fused_rows import fused_rows_pallas, slot_plan
 from repro.kernels.wf_tis import wf_tis_pallas
 
@@ -58,13 +60,15 @@ PALLAS_METHODS = {"cw_tis": cw_tis_pallas, "wf_tis": wf_tis_pallas}
 # repro.analysis.kernelcheck verifies (grid order, carry happens-before,
 # output coverage, in-bounds index maps, VMEM fit).  Every PALLAS_METHODS
 # entry must have one — asserted by the kernelcheck conformance tests.
-# "fused_rows" is spec-verified too but is NOT a PALLAS_METHODS entry:
-# it is not a full-H method you can name in integral_histogram(); it is
-# the query-fused dispatch behind fused_corner_rows().
+# "fused_rows" and "delta_apply" are spec-verified too but are NOT
+# PALLAS_METHODS entries: they are not full-H methods you can name in
+# integral_histogram(); they are the query-fused dispatch behind
+# fused_corner_rows() and the slab-repair primitive behind delta_apply().
 KERNEL_SPECS = {
     "cw_tis": cw_tis.kernel_specs,
     "wf_tis": wf_tis.kernel_specs,
     "fused_rows": fused_rows.kernel_specs,
+    "delta_apply": delta_apply_mod.kernel_specs,
 }
 
 
@@ -329,6 +333,67 @@ def fused_corner_rows(
             backend=backend,
         )
     return R[0] if squeeze else R
+
+
+def delta_apply(
+    H: jnp.ndarray,
+    delta: jnp.ndarray,
+    *,
+    backend: str = "auto",
+    tile: int = 128,
+    bin_block: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Repair a clean H slab with a broadcast carry delta.
+
+    The incremental video path (core/delta.py): when rows above a slab
+    were edited, the slab's correction is one ``(..., num_bins, w)``
+    delta — the dirty band's new bottom row minus its old one — added
+    to every row.  All arithmetic is integer-valued fp32, so the result
+    is bit-exact against recomputing the slab from the new frame.
+
+    Args:
+      H: (num_bins, h, w) or (n, num_bins, h, w) fp32 clean slab.
+      delta: (num_bins, w) or (n, num_bins, w) carry delta, leading
+        frame axis matching ``H``.
+
+    Returns:
+      ``H + delta`` broadcast over the row axis, same logical shape as
+      ``H``.  Pallas backend streams the slab tile-by-tile through VMEM
+      (kernels/delta_apply.py); the jnp backend is one fused XLA add.
+    """
+    if H.ndim not in (3, 4):
+        raise ValueError(
+            f"expected (num_bins, h, w) or (n, num_bins, h, w), got "
+            f"{H.shape}")
+    if backend not in ("auto", "pallas", "jnp"):
+        raise ValueError(f"unknown backend {backend!r}")
+    squeeze = H.ndim == 3
+    slab = H[None] if squeeze else H
+    d = delta[None] if squeeze and delta.ndim == 2 else delta
+    n, nb, h, w = slab.shape
+    if d.shape != (n, nb, w):
+        raise ValueError(
+            f"delta shape {delta.shape} incompatible with {(n, nb, w)} "
+            "(frames, num_bins, width)")
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "jnp"
+
+    if backend == "jnp":
+        out = slab + d[..., None, :]
+    else:
+        nb_pad = nb + (-nb) % bin_block
+        pad_b = [(0, 0), (0, nb_pad - nb)]
+        slab_p = jnp.pad(
+            _pad_to(slab.astype(jnp.float32), tile, tile, 0.0),
+            pad_b + [(0, 0), (0, 0)])
+        d_p = jnp.pad(d.astype(jnp.float32),
+                      pad_b + [(0, (-w) % tile)])
+        out = delta_apply_pallas(
+            slab_p, d_p, tile=tile, bin_block=bin_block,
+            interpret=interpret,
+        )[:, :nb, :h, :w]
+    return out[0] if squeeze else out
 
 
 def fused_likelihood_map(

@@ -10,14 +10,23 @@ This module adds the request-level scheduler on top:
     a single ``rows()`` pass (PR 4's ``prefetch_rows``), so k queries on
     one frame cost one H computation and one band stream, not k.
   * **HSource LRU cache** — computed representations are kept keyed by
-    ``frame_ref`` (``cache_size`` frames).  A hit on a dense or spilled
-    source answers with no H computation at all; a hit on a *banded*
-    source caches the replayable stream factory, so it skips planning
-    and re-streams the bands for the hit's corner-row union — bounded
-    memory (full H still never materializes), not zero kernel work.
-    ``stats.cache_hits`` counts requests served from the cache either
-    way; ``engine_runs`` counts plan+compute dispatches through the
-    engine.
+    ``frame_ref`` (``cache_size`` frames, and optionally ``cache_bytes``
+    of accumulated ``HSource.nbytes`` — evicted LRU-first when either
+    bound is exceeded).  A hit on a dense or spilled source answers with
+    no H computation at all; a hit on a *banded* source caches the
+    replayable stream factory, so it skips planning and re-streams the
+    bands for the hit's corner-row union — bounded memory (full H still
+    never materializes), not zero kernel work.  ``stats.cache_hits``
+    counts requests served from the cache either way; ``engine_runs``
+    counts plan+compute dispatches through the engine.
+  * **Video-delta chaining** — a miss on frame ``t+1`` whose
+    *predecessor* frame ``t`` is still cached hands the pair to the
+    engine (``run(..., prev=(frame_t, source_t))``): for low-motion
+    streams the engine *updates* the cached H in place of a full
+    recompute (core/delta.py), bit-exactly.  The chain is keyed by
+    ``predecessor`` (default: integer refs decrement, so a store indexed
+    by frame number chains for free).  ``stats.updated`` vs
+    ``stats.recomputed`` splits the engine runs by which path ran.
   * **Backpressure** — the submit queue is bounded
     (``max_pending``); a full queue rejects with ``ServiceOverloaded``
     instead of growing without bound (Ehsan et al.'s
@@ -65,6 +74,8 @@ class ServiceStats:
     cache_hits: int = 0             # requests answered from the LRU
     coalesced: int = 0              # requests that shared another's run
     rejected: int = 0               # backpressure rejections
+    updated: int = 0                # engine runs via incremental update
+    recomputed: int = 0             # engine runs via full recompute
     latencies_s: list = dataclasses.field(default_factory=list)
     started_at: float = dataclasses.field(default_factory=time.perf_counter)
 
@@ -83,10 +94,26 @@ class ServiceStats:
             "cache_hit_rate": self.cache_hits / max(self.requests, 1),
             "coalesced": self.coalesced,
             "rejected": self.rejected,
+            # engine-run split under video-delta chaining ("hit" is the
+            # third outcome: answered with no engine run at all)
+            "updated": self.updated,
+            "recomputed": self.recomputed,
+            "hit": self.cache_hits,
+            "update_ratio": self.updated / max(self.engine_runs, 1),
             "requests_per_s": done / wall if wall > 0 else 0.0,
             "latency_p50_s": float(lat[int(0.50 * (done - 1))]) if done else 0.0,
             "latency_p95_s": float(lat[int(0.95 * (done - 1))]) if done else 0.0,
         }
+
+
+def _int_predecessor(frame_ref):
+    """Default frame-chain resolver: integer refs decrement (frame ``t``
+    follows ``t - 1``); anything else has no known predecessor."""
+    if isinstance(frame_ref, bool):
+        return None
+    if isinstance(frame_ref, (int, np.integer)):
+        return frame_ref - 1
+    return None
 
 
 @dataclasses.dataclass
@@ -127,8 +154,15 @@ class AnalyticsService:
       frames: ``frame_ref -> frame`` resolver — a mapping (frame store)
         or a callable (decoder / fetcher).  Only cache *misses* resolve.
       cache_size: HSource LRU entries kept (0 disables caching).
+      cache_bytes: optional bound on the cache's accumulated
+        ``HSource.nbytes`` (planner size estimates for banded-factory
+        entries); LRU entries are evicted until the total fits.
       max_pending: bound on queued submits before ``ServiceOverloaded``.
       max_coalesce: most requests the worker drains into one batch.
+      predecessor: ``frame_ref -> prev_ref | None`` — names the frame a
+        ref follows, seeding the engine's incremental video-delta path
+        when the predecessor's H is still cached.  Defaults to integer
+        decrement; pass ``lambda ref: None`` to disable chaining.
     """
 
     # Shared mutable state and the methods that mutate it: writes to
@@ -144,19 +178,27 @@ class AnalyticsService:
         frames: Mapping | Callable,
         *,
         cache_size: int = 8,
+        cache_bytes: int | None = None,
         max_pending: int = 64,
         max_coalesce: int = 32,
+        predecessor: Callable | None = None,
     ):
         if cache_size < 0 or max_pending < 1 or max_coalesce < 1:
             raise ValueError(
                 "cache_size >= 0, max_pending >= 1, max_coalesce >= 1"
             )
+        if cache_bytes is not None and cache_bytes < 0:
+            raise ValueError("cache_bytes must be >= 0")
         self._engine = engine
         self._resolve = (
             frames.__getitem__ if hasattr(frames, "__getitem__") else frames
         )
         self.cache_size = cache_size
+        self.cache_bytes = cache_bytes
         self.max_coalesce = max_coalesce
+        self._predecessor = (
+            predecessor if predecessor is not None else _int_predecessor
+        )
         self._cache: collections.OrderedDict = collections.OrderedDict()
         self._lock = threading.Lock()
         self.stats = ServiceStats()
@@ -165,6 +207,20 @@ class AnalyticsService:
         self._closing = False
 
     # -- the one serving core (both drivers call this) ----------------------
+    def _evict_locked(self) -> None:
+        """LRU eviction under both bounds; caller holds ``self._lock``
+        (hence the pragmas — the rule cannot see a caller's lock)."""
+        while len(self._cache) > self.cache_size:
+            # analysis: allow-lock-discipline(caller holds self._lock)
+            self._cache.popitem(last=False)
+        if self.cache_bytes is not None:
+            total = sum(
+                getattr(s, "nbytes", 0) for s in self._cache.values())
+            while self._cache and total > self.cache_bytes:
+                # analysis: allow-lock-discipline(caller holds self._lock)
+                _, dropped = self._cache.popitem(last=False)
+                total -= getattr(dropped, "nbytes", 0)
+
     def _source_for(self, frame_ref, queries):
         """(source, results-or-None, hit): the cached HSource, or one
         engine run answering ``queries`` directly on a miss."""
@@ -172,17 +228,37 @@ class AnalyticsService:
             cached = self._cache.get(frame_ref)
             if cached is not None:
                 self._cache.move_to_end(frame_ref)
+            prev_ref = prev_src = None
+            if cached is None:
+                try:
+                    prev_ref = self._predecessor(frame_ref)
+                except Exception:
+                    prev_ref = None
+                if prev_ref is not None:
+                    prev_src = self._cache.get(prev_ref)
         if cached is not None:
             return cached, None, True
         frame = self._resolve(frame_ref)
-        out = self._engine.run(frame, queries)      # ONE compute, k queries
+        prev = None
+        if prev_src is not None:
+            try:
+                prev = (self._resolve(prev_ref), prev_src)
+            except Exception:  # predecessor frame gone from the store
+                prev = None
+        # ONE compute, k queries — updated in place when the planner
+        # takes the incremental path off the cached predecessor H
+        out = self._engine.run(frame, queries, prev=prev)
+        incremental = getattr(out.plan, "incremental", False)
         with self._lock:
             self.stats.engine_runs += 1
+            if incremental:
+                self.stats.updated += 1
+            else:
+                self.stats.recomputed += 1
             if self.cache_size:
                 self._cache[frame_ref] = out.source
                 self._cache.move_to_end(frame_ref)
-                while len(self._cache) > self.cache_size:
-                    self._cache.popitem(last=False)
+                self._evict_locked()
         return out.source, out.results, False
 
     def _answer_group(self, frame_ref, group: list[_Pending]) -> list:
@@ -213,9 +289,11 @@ class AnalyticsService:
                 results = out.results
                 with self._lock:
                     self.stats.engine_runs += 1
+                    self.stats.recomputed += 1
                     if self.cache_size:
                         self._cache[frame_ref] = out.source
                         self._cache.move_to_end(frame_ref)
+                        self._evict_locked()
         with self._lock:
             self.stats.requests += len(group)
             if hit:

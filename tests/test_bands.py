@@ -243,7 +243,10 @@ def test_spill_policies_exact(rng, storage):
     np.testing.assert_array_equal(
         np.asarray(got), np.asarray(region_histogram(full, rects)))
     np.testing.assert_array_equal(sp.assemble(), np.asarray(full))
-    assert sp.nbytes == (2 if storage == "uint16" else 4) * 8 * 60 * 44
+    # band bytes + the retained fp32 bottom-row carries (4 bands) that
+    # seed incremental video-delta updates (core/delta.py)
+    assert sp.nbytes == (2 if storage == "uint16" else 4) * 8 * 60 * 44 \
+        + 4 * len(sp.spans) * 8 * 44
 
 
 def test_uint16_modular_wraparound_exact(rng):

@@ -147,6 +147,23 @@ def test_bench_compare_cli_roundtrip(tmp_path, capsys):
     assert bench_compare.main(
         [str(old_p), str(new_p), "--output", str(out_p)]) == 0
     assert "Bench trajectory" in out_p.read_text()
-    # unreadable input exits 2
-    assert bench_compare.main([str(tmp_path / "nope.json"),
-                               str(new_p)]) == 2
+    # unreadable NEW record exits 2
+    assert bench_compare.main([str(old_p),
+                               str(tmp_path / "nope.json")]) == 2
+
+
+def test_bench_compare_missing_prior_seeds_trajectory(tmp_path, capsys):
+    """First run of a fresh cache: no/empty/garbage OLD must not fail CI —
+    the new record seeds the curve and every row reads 'new'."""
+    bench_compare = _bench_compare()
+    new_p = tmp_path / "new.json"
+    new_p.write_text(json.dumps(_payload(serve=[("d1", 1.0)])))
+    empty_p = tmp_path / "empty.json"
+    empty_p.write_text("")
+    garbage_p = tmp_path / "garbage.json"
+    garbage_p.write_text("[1, 2]")
+    for old in (tmp_path / "nope.json", empty_p, garbage_p):
+        assert bench_compare.main([str(old), str(new_p)]) == 0
+        out = capsys.readouterr().out
+        assert "seeds the trajectory" in out
+        assert "| serve | d1 | — | 1.0000 | new | |" in out

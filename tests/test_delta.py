@@ -1,0 +1,348 @@
+"""Incremental video-delta H (ISSUE 9): dirty-band invalidation.
+
+Acceptance: a delta-updated H is **bit-exact** against a monolithic
+recompute — across dense / banded / spilled representations, every
+storage policy (fp32 / uint32 / uint16 modular), uneven band plans, and
+dirty-first / dirty-last / all-dirty frames.  The fused representation
+never stores H, so a fused predecessor falls back to a full recompute.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import autotune
+from repro.core import delta as delta_mod
+from repro.core.bands import plan_bands
+from repro.core.engine import (
+    HistogramEngine,
+    RegionQuery,
+    WorkloadSpec,
+    plan,
+)
+from repro.kernels import ops
+
+H, W, BINS = 32, 24, 8
+
+
+@pytest.fixture()
+def f0(rng):
+    return rng.integers(0, 256, (H, W), dtype=np.uint8)
+
+
+def _mutate(frame, rng, r0, r1):
+    """A low-motion successor: rows [r0, r1) rewritten, rest identical."""
+    nxt = frame.copy()
+    nxt[r0:r1] = rng.integers(0, 256, (r1 - r0, frame.shape[-1]),
+                              dtype=np.uint8)
+    return nxt
+
+
+def _full(frame, **kw):
+    return np.asarray(ops.integral_histogram(frame, BINS, backend="jnp",
+                                             **kw))
+
+
+# ---------------------------------------------------------------------------
+# diff_bands: the detector
+# ---------------------------------------------------------------------------
+def test_diff_bands_report(rng, f0):
+    bp = plan_bands(H, W, BINS, band_h=8)           # 4 bands of 8 rows
+    f1 = _mutate(f0, rng, 5, 9)                     # straddles bands 0, 1
+    rep = delta_mod.diff_bands(f0, f1, bp)
+    assert rep.dirty == (True, True, False, False)
+    assert rep.dirty_rows == 16 and rep.dirty_fraction == 0.5
+    assert rep.num_dirty == 2 and not rep.all_clean
+
+    clean = delta_mod.diff_bands(f0, f0, bp)
+    assert clean.all_clean and clean.dirty_fraction == 0.0
+
+    # bare span sequences work (a SpilledIH hands its own spans)
+    rep2 = delta_mod.diff_bands(f0, f1, [(0, 5), (5, 16), (16, H)])
+    assert rep2.dirty == (False, True, False)
+
+    with pytest.raises(ValueError, match="shapes differ"):
+        delta_mod.diff_bands(f0, f1[:-1], bp)
+    with pytest.raises(ValueError, match="do not tile"):
+        delta_mod.diff_bands(f0, f1, [(0, 5), (6, H)])     # gap
+    with pytest.raises(ValueError, match="do not tile"):
+        delta_mod.diff_bands(f0, f1, [(0, H - 1)])         # short
+
+
+def test_diff_bands_frame_stacks(rng, f0):
+    clip0 = np.stack([f0, f0])
+    clip1 = clip0.copy()
+    clip1[1, 20:22] = 0                             # dirty in ONE frame
+    rep = delta_mod.diff_bands(clip0, clip1, plan_bands(H, W, BINS,
+                                                        band_h=8))
+    assert rep.dirty == (False, False, True, False)
+
+
+# ---------------------------------------------------------------------------
+# update_dense_ih: the direct walk, every dirty position
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("span", [
+    (0, 4),          # dirty-first band
+    (13, 18),        # dirty middle, straddling uneven bands
+    (28, 32),        # dirty-last band
+    (0, 32),         # all-dirty (the walk must still be exact)
+])
+def test_update_dense_ih_parity_uneven_bands(rng, f0, span):
+    spans = [(0, 5), (5, 16), (16, 23), (23, H)]    # uneven on purpose
+    f1 = _mutate(f0, rng, *span)
+    rep = delta_mod.diff_bands(f0, f1, spans)
+
+    def recompute(band_rows, carry):
+        return ops.integral_histogram(band_rows, BINS, backend="jnp",
+                                      carry_in=carry)
+
+    got = delta_mod.update_dense_ih(_full(f0), f1, rep,
+                                    recompute=recompute)
+    np.testing.assert_array_equal(np.asarray(got), _full(f1))
+
+
+def test_update_dense_ih_batched(rng):
+    clip0 = rng.integers(0, 256, (2, H, W), dtype=np.uint8)
+    clip1 = clip0.copy()
+    clip1[:, 9:12] = rng.integers(0, 256, (2, 3, W), dtype=np.uint8)
+    rep = delta_mod.diff_bands(clip0, clip1, plan_bands(H, W, BINS,
+                                                        band_h=8))
+
+    def recompute(band_rows, carry):
+        return ops.integral_histogram(band_rows, BINS, backend="jnp",
+                                      carry_in=carry)
+
+    got = delta_mod.update_dense_ih(_full(clip0), clip1, rep,
+                                    recompute=recompute)
+    np.testing.assert_array_equal(np.asarray(got), _full(clip1))
+
+
+# ---------------------------------------------------------------------------
+# the engine path: plan decision + per-representation parity
+# ---------------------------------------------------------------------------
+def test_engine_dense_incremental_parity(rng, f0):
+    eng = HistogramEngine(BINS, backend="jnp")
+    f1 = _mutate(f0, rng, 6, 9)
+    out0 = eng.run(f0)
+    out1 = eng.run(f1, prev=(f0, out0))
+    assert out1.plan.incremental
+    assert "incremental" in out1.plan.explain()
+    full = eng.run(f1)
+    assert not full.plan.incremental
+    a = np.asarray(out1.source.dense())
+    b = np.asarray(full.source.dense())
+    assert a.dtype == b.dtype
+    np.testing.assert_array_equal(a, b)
+
+
+def test_engine_high_motion_falls_back(rng, f0):
+    eng = HistogramEngine(BINS, backend="jnp")
+    f1 = rng.integers(0, 256, (H, W), dtype=np.uint8)   # wholly dirty
+    out = eng.run(f1, prev=(f0, eng.run(f0)))
+    assert not out.plan.incremental
+    np.testing.assert_array_equal(np.asarray(out.source.dense()),
+                                  _full(f1))
+
+
+def test_engine_shape_mismatch_falls_back(rng, f0):
+    eng = HistogramEngine(BINS, backend="jnp")
+    prev = eng.run(f0)
+    f1 = rng.integers(0, 256, (H + 8, W), dtype=np.uint8)
+    out = eng.run(f1, prev=(f0, prev))
+    assert not out.plan.incremental
+
+
+@pytest.mark.parametrize("storage", ["float32", "uint32", "uint16"])
+def test_engine_spilled_incremental_parity(rng, f0, storage):
+    budget = 4 * BINS * W * 8                       # 8-row bands
+    eng = HistogramEngine(BINS, backend="jnp", storage=storage,
+                          memory_budget_bytes=budget)
+    f1 = _mutate(f0, rng, 9, 12)
+    out0 = eng.run(f0)
+    assert out0.plan.representation == "spilled"
+    out1 = eng.run(f1, prev=(f0, out0))
+    assert out1.plan.incremental
+    full = eng.run(f1)
+    for got, want in zip(out1.source.bands, full.source.bands):
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(got, want)
+    for got, want in zip(out1.source.carries, full.source.carries):
+        np.testing.assert_array_equal(got, want)
+    # chain a second update off the updated source (carries stay live)
+    f2 = _mutate(f1, rng, 25, 28)
+    out2 = eng.run(f2, prev=(f1, out1))
+    assert out2.plan.incremental
+    for got, want in zip(out2.source.bands, eng.run(f2).source.bands):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_engine_banded_incremental_parity(rng, f0):
+    budget = 4 * BINS * W * 8
+    eng = HistogramEngine(BINS, backend="jnp", memory_budget_bytes=budget)
+    f1 = _mutate(f0, rng, 3, 6)
+    out0 = eng.run(f0)
+    assert out0.plan.representation == "banded"
+    out1 = eng.run(f1, prev=(f0, out0))
+    assert out1.plan.incremental
+    np.testing.assert_array_equal(np.asarray(out1.source.dense()),
+                                  _full(f1))
+
+
+def test_fused_predecessor_falls_back_to_recompute(rng, f0):
+    """A fused H never materializes, so it cannot seed an update."""
+    eng = HistogramEngine(BINS, backend="jnp")
+    q = RegionQuery(np.array([2, 2, 10, 10]))
+    prev = eng.run(f0, [q])
+    assert prev.plan.representation == "fused"
+    f1 = _mutate(f0, rng, 6, 9)
+    out = eng.run(f1, [q], prev=(f0, prev))
+    assert not out.plan.incremental
+    want = eng.run(f1, [q]).results[0]
+    np.testing.assert_array_equal(np.asarray(out.results[0]),
+                                  np.asarray(want))
+
+
+def test_incremental_plan_answers_queries(rng, f0):
+    """Queries ride an incremental plan (fusion is skipped: the slab
+    must persist to seed the next frame)."""
+    eng = HistogramEngine(BINS, backend="jnp")
+    f1 = _mutate(f0, rng, 6, 9)
+    q = RegionQuery(np.array([2, 2, 10, 10]))
+    out = eng.run(f1, [q], prev=(f0, eng.run(f0)))
+    assert out.plan.incremental and out.plan.representation == "dense"
+    want = eng.run(f1, [q]).results[0]
+    np.testing.assert_array_equal(np.asarray(out.results[0]),
+                                  np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# planner gate: threshold, validation, priors override
+# ---------------------------------------------------------------------------
+def test_plan_threshold_gate():
+    base = WorkloadSpec(height=H, width=W, num_bins=BINS, backend="jnp")
+    low = plan(dataclasses.replace(base, dirty_fraction=0.2))
+    assert low.incremental
+    high = plan(dataclasses.replace(base, dirty_fraction=0.5))
+    assert not high.incremental
+    none = plan(base)
+    assert not none.incremental
+    with pytest.raises(ValueError, match="dirty_fraction"):
+        plan(dataclasses.replace(base, dirty_fraction=1.5))
+
+
+def test_plan_threshold_prior_override(tmp_path, monkeypatch):
+    priors = tmp_path / "tuned.json"
+    priors.write_text(json.dumps({
+        "version": 1,
+        "configs": {f"{H}x{W}x{BINS}": {"tile": 128, "bin_block": 8,
+                                        "delta_threshold": 0.6}},
+    }))
+    monkeypatch.setenv(autotune.ENV_VAR, str(priors))
+    spec = WorkloadSpec(height=H, width=W, num_bins=BINS, backend="jnp",
+                        dirty_fraction=0.5)
+    assert plan(spec).incremental          # 0.5 <= tuned 0.6
+
+
+def test_explain_prices_the_update(rng, f0):
+    eng = HistogramEngine(BINS, backend="jnp")
+    f1 = _mutate(f0, rng, 6, 9)
+    text = eng.run(f1, prev=(f0, eng.run(f0))).plan.explain()
+    line = [ln for ln in text.splitlines() if "incremental" in ln]
+    assert len(line) == 1 and "reuse" in line[0]
+    # non-incremental plans render no such line (golden safety)
+    assert "incremental" not in eng.run(f1).plan.explain()
+
+
+def test_plancheck_incremental_line(rng, f0):
+    from repro.analysis import plancheck
+
+    eng = HistogramEngine(BINS, backend="jnp")
+    f1 = _mutate(f0, rng, 6, 9)
+    p = eng.run(f1, prev=(f0, eng.run(f0))).plan
+    v = plancheck.check_plan(p, deep=True)
+    assert v.ok
+    inc = [c for c in v.checks if c.name == "incremental"]
+    assert len(inc) == 1 and inc[0].status == "ok"
+    # and absent from a plain plan's verdict
+    v2 = plancheck.check_plan(eng.run(f1).plan)
+    assert not any(c.name == "incremental" for c in v2.checks)
+
+
+# ---------------------------------------------------------------------------
+# the delta_apply kernel
+# ---------------------------------------------------------------------------
+def test_delta_apply_jnp_vs_pallas_interpret(rng):
+    slab = rng.integers(0, 1000, (BINS, 40, 56)).astype(np.float32)
+    d = rng.integers(-50, 50, (BINS, 56)).astype(np.float32)
+    a = np.asarray(ops.delta_apply(slab, d, backend="jnp"))
+    b = np.asarray(ops.delta_apply(slab, d, backend="pallas",
+                                   interpret=True))
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a, slab + d[:, None, :])
+    # batched (n, b, h, w) form
+    slab4 = np.stack([slab, 2 * slab])
+    d4 = np.stack([d, -d])
+    a4 = np.asarray(ops.delta_apply(slab4, d4, backend="jnp"))
+    b4 = np.asarray(ops.delta_apply(slab4, d4, backend="pallas",
+                                    interpret=True))
+    np.testing.assert_array_equal(a4, b4)
+
+
+def test_delta_apply_validation(rng):
+    slab = np.zeros((BINS, 8, 8), np.float32)
+    with pytest.raises(ValueError):
+        ops.delta_apply(slab, np.zeros((BINS + 1, 8), np.float32))
+    with pytest.raises(ValueError):
+        ops.delta_apply(np.zeros((8,), np.float32),
+                        np.zeros((8, 8), np.float32))
+
+
+def test_delta_apply_kernelspec_registered():
+    from repro.analysis import kernelcheck
+
+    assert "delta_apply" in ops.KERNEL_SPECS
+    for geom in kernelcheck.DEFAULT_GEOMETRIES:
+        verdict = kernelcheck.check_method("delta_apply", geom)
+        assert verdict.ok, verdict.render()
+    est = kernelcheck.vmem_required("delta_apply",
+                                    kernelcheck.DEFAULT_GEOMETRIES[0])
+    assert est is not None and est[0] <= kernelcheck.VMEM_LIMIT_BYTES
+
+
+# ---------------------------------------------------------------------------
+# spilled walk edges
+# ---------------------------------------------------------------------------
+def test_update_spilled_requires_carries_and_matching_spans(rng, f0):
+    budget = 4 * BINS * W * 8
+    eng = HistogramEngine(BINS, backend="jnp", storage="uint16",
+                          memory_budget_bytes=budget)
+    src = eng.run(f0).source
+    f1 = _mutate(f0, rng, 9, 12)
+    rep = delta_mod.diff_bands(f0, f1, src.spans)
+
+    def recompute(band_rows, carry):
+        return ops.integral_histogram(band_rows, BINS, backend="jnp",
+                                      carry_in=carry)
+
+    stale = dataclasses.replace(src, carries=None)
+    with pytest.raises(ValueError, match="carr"):
+        delta_mod.update_spilled_ih(stale, f1, rep, recompute=recompute)
+    bad = delta_mod.diff_bands(f0, f1, [(0, H)])
+    with pytest.raises(ValueError, match="spans"):
+        delta_mod.update_spilled_ih(src, f1, bad, recompute=recompute)
+
+
+def test_tracker_incremental_clip_parity(rng):
+    from repro.core.tracking import FragmentTracker, TrackerConfig
+
+    clip = [rng.integers(0, 256, (H, W), dtype=np.uint8)]
+    for _ in range(3):
+        clip.append(_mutate(clip[-1], rng, 9, 12))
+    clip = np.stack(clip)
+    tr = FragmentTracker(TrackerConfig(num_bins=BINS, search_radius=3))
+    st = tr.init(clip[0], np.array([8, 6, 20, 18]))
+    _, a = tr.track(st, clip)
+    _, b = tr.track(st, clip, incremental=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -196,6 +196,97 @@ def test_worker_failure_lands_on_the_future(store):
 def test_bad_config_rejected(store):
     eng, _ = _probed_engine()
     for kw in (dict(cache_size=-1), dict(max_pending=0),
-               dict(max_coalesce=0)):
+               dict(max_coalesce=0), dict(cache_bytes=-1)):
         with pytest.raises(ValueError):
             AnalyticsService(eng, store, **kw)
+
+
+# ---------------------------------------------------------------------------
+# video-delta chaining + byte-aware cache bound (ISSUE 9)
+# ---------------------------------------------------------------------------
+def _video_store(rng, n=5, h=32, w=24):
+    """Low-motion stream keyed by frame number: each frame rewrites a
+    few rows of its predecessor."""
+    frames = [rng.integers(0, 256, (h, w), dtype=np.uint8)]
+    for _ in range(n - 1):
+        nxt = frames[-1].copy()
+        r = int(rng.integers(0, h - 3))
+        nxt[r:r + 3] = rng.integers(0, 256, (3, w), dtype=np.uint8)
+        frames.append(nxt)
+    return {i: f for i, f in enumerate(frames)}
+
+
+# 6 rects at distinct rows -> 12 corner rows > 32/4, so plans stay
+# dense (a fused plan never stores H and cannot seed the chain).
+DENSE_RECTS = np.array([[3 * i, 2, 3 * i + 1, 10] for i in range(6)])
+
+
+def test_video_chain_updates_cached_h(rng):
+    store = _video_store(rng)
+    eng, calls = _probed_engine()
+    svc = AnalyticsService(eng, store)
+    res = svc.process([(i, RegionQuery(DENSE_RECTS))
+                       for i in range(len(store))])
+    snap = svc.stats.snapshot()
+    # frame 0 recomputes; every successor updates its predecessor's H
+    assert snap["recomputed"] == 1
+    assert snap["updated"] == len(store) - 1
+    assert snap["update_ratio"] == pytest.approx(
+        (len(store) - 1) / len(store))
+    assert len(calls) == 1              # compute() ran once; rest updated
+    # bit-exact vs fresh engine runs per frame
+    for i in range(len(store)):
+        want = HistogramEngine(8, backend="jnp").run(
+            store[i], [RegionQuery(DENSE_RECTS)]).results[0]
+        np.testing.assert_array_equal(np.asarray(res[i]),
+                                      np.asarray(want))
+
+
+def test_video_chain_disabled_by_predecessor_resolver(rng):
+    store = _video_store(rng, n=3)
+    eng, _ = _probed_engine()
+    svc = AnalyticsService(eng, store, predecessor=lambda ref: None)
+    svc.process([(i, RegionQuery(DENSE_RECTS)) for i in range(3)])
+    snap = svc.stats.snapshot()
+    assert snap["updated"] == 0 and snap["recomputed"] == 3
+
+
+def test_video_chain_survives_missing_predecessor_frame(rng):
+    """Predecessor H cached but its frame gone from the store: the miss
+    recomputes instead of failing."""
+    store = _video_store(rng, n=2)
+    eng, _ = _probed_engine()
+    svc = AnalyticsService(eng, store)
+    svc.process([(0, RegionQuery(DENSE_RECTS))])
+    del store[0]
+    out = svc.process([(1, RegionQuery(DENSE_RECTS))])
+    snap = svc.stats.snapshot()
+    assert snap["updated"] == 0 and snap["recomputed"] == 2
+    want = HistogramEngine(8, backend="jnp").run(
+        svc._resolve(1), [RegionQuery(DENSE_RECTS)]).results[0]
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(want))
+
+
+def test_cache_bytes_bound_evicts_by_size(rng):
+    store = _video_store(rng)
+    one = 4 * 8 * 32 * 24               # dense H bytes per frame
+    eng, _ = _probed_engine()
+    svc = AnalyticsService(eng, store, cache_bytes=2 * one)
+    svc.process([(i, RegionQuery(DENSE_RECTS)) for i in range(5)])
+    assert svc.cached_frames == (3, 4)  # LRU-evicted down to 2 entries
+    # an entry alone over the bound cannot stay cached
+    svc2 = AnalyticsService(eng, store, cache_bytes=one - 1)
+    svc2.process([(0, RegionQuery(DENSE_RECTS))])
+    assert svc2.cached_frames == ()
+
+
+def test_snapshot_counts_hits_beside_update_split(rng):
+    store = _video_store(rng, n=2)
+    eng, _ = _probed_engine()
+    svc = AnalyticsService(eng, store)
+    svc.process([(0, RegionQuery(DENSE_RECTS))])
+    svc.process([(0, RegionQuery(DENSE_RECTS))])    # cache hit
+    svc.process([(1, RegionQuery(DENSE_RECTS))])    # chained update
+    snap = svc.stats.snapshot()
+    assert snap["hit"] == 1 == snap["cache_hits"]
+    assert snap["recomputed"] == 1 and snap["updated"] == 1
