@@ -9,13 +9,14 @@ spatial sharding with cross-device carries is the beyond-paper extension
 
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
 import textwrap
 
 _BODY = r"""
-import time, warnings
+import json, time, warnings
 warnings.filterwarnings("ignore")
 import numpy as np, jax, jax.numpy as jnp
 from repro.core.distributed import bin_sharded_ih, spatial_sharded_ih
@@ -24,6 +25,17 @@ from benchmarks.common import fmt_table
 
 quick = __QUICK__
 rows = []
+recs = []
+
+
+def timed(fn, img, label):
+    fn(img).block_until_ready()
+    t0 = time.perf_counter(); fn(img).block_until_ready()
+    dt = time.perf_counter() - t0
+    recs.append({"median_s": dt, "min_s": dt, "iters": 1, "label": label})
+    return dt
+
+
 rng = np.random.default_rng(0)
 cases = [((1280, 720), 32), ((1920, 1080), 32)]
 if not quick:
@@ -33,23 +45,17 @@ for (w, h), bins in cases:
     # single device
     fn1 = jax.jit(lambda im: integral_histogram(im, bins, method="wf_tis",
                                                 backend="jnp"))
-    fn1(img).block_until_ready()
-    t0 = time.perf_counter(); fn1(img).block_until_ready()
-    t1 = time.perf_counter() - t0
+    t1 = timed(fn1, img, f"multidev_{h}x{w}_b{bins}_1dev")
     for ndev in (2, 4, 8):
         mesh = jax.make_mesh((1, ndev), ("data", "model"))
         fnd = jax.jit(lambda im: bin_sharded_ih(im, bins, mesh))
-        fnd(img).block_until_ready()
-        t0 = time.perf_counter(); fnd(img).block_until_ready()
-        td = time.perf_counter() - t0
+        td = timed(fnd, img, f"multidev_{h}x{w}_b{bins}_bins{ndev}")
         rows.append([f"{h}x{w}", bins, ndev, "bins",
                      f"{td*1e3:.1f} ms", f"{t1/td:.2f}x"])
     mesh = jax.make_mesh((8, 1), ("data", "model"))
     fns = jax.jit(lambda im: spatial_sharded_ih(im, bins, mesh,
                                                 scan_impl="ppermute"))
-    fns(img).block_until_ready()
-    t0 = time.perf_counter(); fns(img).block_until_ready()
-    ts = time.perf_counter() - t0
+    ts = timed(fns, img, f"multidev_{h}x{w}_b{bins}_rows8")
     rows.append([f"{h}x{w}", bins, 8, "rows+carry wavefront",
                  f"{ts*1e3:.1f} ms", f"{t1/ts:.2f}x"])
 print(fmt_table(["frame", "bins", "devices", "shard", "wall", "vs 1 dev"],
@@ -57,20 +63,33 @@ print(fmt_table(["frame", "bins", "devices", "shard", "wall", "vs 1 dev"],
 print("NOTE: host 'devices' share one physical CPU core, so wall-clock")
 print("speedup is bounded by 1x; the table demonstrates correct sharded")
 print("execution + collective schedule; real scaling is the dry-run's job.")
+print("TIMINGS_JSON " + json.dumps(recs))
 """
 
 
 def run(quick: bool = False) -> str:
+    from benchmarks import common
+
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=8",
                PYTHONPATH=os.environ.get("PYTHONPATH", "src"))
-    code = _BODY.replace("__QUICK__", repr(quick))
+    code = _BODY.replace("__QUICK__", repr(quick or common.SMOKE))
     proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                           env=env, capture_output=True, text=True,
                           timeout=900)
     if proc.returncode != 0:
         return f"FAILED:\n{proc.stderr[-2000:]}"
-    return proc.stdout.strip()
+    # The subprocess owns the 8-device view, so its timings never pass
+    # through common.time_fn — it ships them back on a TIMINGS_JSON line
+    # that we fold into the parent's record stream (the --json artifact
+    # previously had no multidevice records at all).
+    lines = []
+    for line in proc.stdout.splitlines():
+        if line.startswith("TIMINGS_JSON "):
+            common.TIMINGS.extend(json.loads(line[len("TIMINGS_JSON "):]))
+        else:
+            lines.append(line)
+    return "\n".join(lines).strip()
 
 
 if __name__ == "__main__":

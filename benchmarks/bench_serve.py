@@ -20,6 +20,11 @@ is 0 unless the store is a low-motion stream), p95 latency.
 from __future__ import annotations
 
 import collections
+import json
+import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -74,6 +79,121 @@ def _drive(svc: AnalyticsService, reqs, depth: int) -> float:
     return time.perf_counter() - t0
 
 
+# Mesh-scale curve (ISSUE 10): the same closed-loop traffic against
+# DistributedAnalyticsService at 1/2/4/8 forced host devices.  Each point
+# runs in a subprocess so the device count can differ per point without
+# disturbing the parent's single-device view; the subprocess reports one
+# `RESULT {json}` line with the wall time and a digest of every answer,
+# and the parent asserts the multi-device digests match the single-device
+# baseline (bit-exactness is the acceptance bar, throughput is the curve).
+_SCALE_BODY = r"""
+import hashlib, json, time, warnings
+warnings.filterwarnings("ignore")
+import numpy as np, jax
+
+from repro.core import distances
+from repro.core.engine import HistogramEngine, LikelihoodQuery, RegionQuery
+from repro.data import video_frames
+from repro.serve import (AnalyticsService, DistributedAnalyticsService,
+                         sharded_engine_factory)
+
+ndev = __NDEV__
+smoke = __SMOKE__
+assert len(jax.devices()) == ndev, (ndev, jax.devices())
+
+n_req = 48 if smoke else 240
+n_cams, per_cam = (4, 4) if smoke else (8, 8)
+h, w, bins = (96, 128, 16) if smoke else (240, 320, 16)
+
+# Independent camera streams: string refs do not chain (no predecessor),
+# so the consistent-hash router spreads them across replica groups.
+frames = {}
+for cam in range(n_cams):
+    for i, f in enumerate(video_frames(h, w, per_cam, seed=100 + cam)):
+        frames[f"cam{cam}/{i}"] = f
+refs = sorted(frames)
+rng = np.random.default_rng(3)
+target = np.ones(bins, np.float32)
+reqs = []
+for i in range(n_req):
+    ref = refs[int(rng.integers(0, len(refs)))]
+    if i % 3 == 2:
+        q = LikelihoodQuery(target, (24, 24), distances.intersection,
+                            stride=8)
+    else:
+        r0, c0 = int(rng.integers(0, 40)), int(rng.integers(0, 40))
+        q = RegionQuery(np.array([r0, c0, r0 + 23, c0 + 23]))
+    reqs.append((ref, q))
+
+if ndev == 1:
+    svc = AnalyticsService(HistogramEngine(bins, backend="jnp"), frames,
+                           cache_size=8, max_pending=256)
+else:
+    shape = {2: (1, 2), 4: (1, 4), 8: (2, 4)}[ndev]
+    mesh = jax.make_mesh(shape, ("data", "model"))
+    svc = DistributedAnalyticsService(
+        sharded_engine_factory(bins, backend="jnp"), frames,
+        mesh=mesh, replica_axis="data", cache_size=8, max_pending=256)
+
+svc.process(reqs[:2])  # warm the XLA compile cache
+svc.clear_cache()
+t0 = time.perf_counter()
+outs = svc.process(reqs)
+jax.block_until_ready(outs)
+wall = time.perf_counter() - t0
+
+digest = hashlib.blake2b(digest_size=16)
+for out in outs:
+    for leaf in jax.tree_util.tree_leaves(out):
+        digest.update(np.ascontiguousarray(np.asarray(leaf)).tobytes())
+print("RESULT " + json.dumps({"ndev": ndev, "wall_s": wall,
+                              "req_s": n_req / wall,
+                              "digest": digest.hexdigest()}))
+"""
+
+_SCALE_LAYOUT = {1: "single device (plain service)",
+                 2: "1 group x 2-way bins",
+                 4: "1 group x 4-way bins",
+                 8: "2 groups x 4-way bins"}
+
+
+def _scale_curve(smoke: bool) -> str:
+    """req/s vs forced host device count; asserts answers stay bit-exact."""
+    rows = []
+    digests: dict[int, str] = {}
+    for ndev in (1, 2, 4, 8):
+        env = dict(os.environ,
+                   XLA_FLAGS=f"--xla_force_host_platform_device_count={ndev}",
+                   PYTHONPATH=os.environ.get("PYTHONPATH", "src"))
+        code = (_SCALE_BODY.replace("__NDEV__", str(ndev))
+                .replace("__SMOKE__", repr(smoke)))
+        proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                              env=env, capture_output=True, text=True,
+                              timeout=900)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"scale point ndev={ndev} failed:\n{proc.stderr[-2000:]}")
+        res = next(json.loads(line[len("RESULT "):])
+                   for line in proc.stdout.splitlines()
+                   if line.startswith("RESULT "))
+        digests[ndev] = res["digest"]
+        exact = res["digest"] == digests[1]
+        if not exact:
+            raise AssertionError(
+                f"ndev={ndev} answers diverge from the single-device "
+                f"baseline ({res['digest']} != {digests[1]})")
+        common.TIMINGS.append({
+            "median_s": res["wall_s"], "min_s": res["wall_s"], "iters": 1,
+            "label": f"serve_scale_ndev{ndev}",
+        })
+        rows.append([ndev, _SCALE_LAYOUT[ndev], f"{res['req_s']:.1f}",
+                     f"{res['wall_s'] * 1e3:.0f} ms",
+                     "yes" if exact else "NO"])
+    return fmt_table(
+        ["devices", "replica x shard layout", "req/s", "wall",
+         "bit-exact vs 1 dev"], rows)
+
+
 def run(quick: bool = False) -> str:
     n_req = 60 if (quick or common.SMOKE) else 400
     n_frames, hot = (8, 2) if (quick or common.SMOKE) else (32, 4)
@@ -109,11 +229,16 @@ def run(quick: bool = False) -> str:
                 f"{100 * s['update_ratio']:.0f}%",
                 f"{1e3 * s['latency_p95_s']:.1f}",
             ])
-    return fmt_table(
+    out = fmt_table(
         ["depth", "cache", "req/s", "hit rate", "coalesced",
          "runs/req", "updated", "p95 ms"],
         rows,
     )
+    out += ("\n\nmesh scaling (host 'devices' share one CPU core, so "
+            "req/s is about\ncorrectness of the sharded path under load, "
+            "not real speedup):\n")
+    out += _scale_curve(quick or common.SMOKE)
+    return out
 
 
 if __name__ == "__main__":

@@ -386,6 +386,48 @@ def _check_incremental(plan) -> PlanCheck:
         f"reuse ~{per_frame - recomputed} B/frame of cached H")
 
 
+def _check_layout(plan) -> PlanCheck:
+    """Validate the planner's replica x shard mesh layout: the shard
+    axis and every replica axis must exist in the mesh, be disjoint, and
+    their product must cover the whole device set — a layout that
+    silently strands devices would report phantom scaling headroom."""
+    name = "mesh-layout"
+    s = plan.spec
+    lay = plan.layout
+    if plan.representation != "sharded" or s.mesh is None:
+        return PlanCheck(
+            name, "fail",
+            f"layout on a {plan.representation!r} plan without a mesh")
+    shape = dict(s.mesh.shape)
+    if lay.shard_axis not in shape:
+        return PlanCheck(
+            name, "fail",
+            f"shard axis {lay.shard_axis!r} not in mesh axes "
+            f"{tuple(shape)}")
+    if lay.kind != plan.sharding:
+        return PlanCheck(
+            name, "fail",
+            f"layout kind {lay.kind!r} disagrees with plan sharding "
+            f"{plan.sharding!r}")
+    if lay.shard_axis in lay.replica_axes:
+        return PlanCheck(
+            name, "fail",
+            f"shard axis {lay.shard_axis!r} doubles as a replica axis")
+    missing = [a for a in lay.replica_axes if a not in shape]
+    if missing:
+        return PlanCheck(
+            name, "fail", f"replica axes {missing} not in mesh")
+    mesh_devices = 1
+    for v in shape.values():
+        mesh_devices *= v
+    covered = lay.num_groups * lay.shards_per_group
+    if covered != mesh_devices or lay.shards_per_group != shape[lay.shard_axis]:
+        return PlanCheck(
+            name, "fail",
+            f"layout covers {covered} of {mesh_devices} mesh devices")
+    return PlanCheck(name, "ok", lay.describe())
+
+
 def _query_area(query) -> int | None:
     """Largest region/window pixel area a query touches, else None."""
     rects = getattr(query, "rects", None)
@@ -491,6 +533,9 @@ def _structural_checks(plan) -> tuple[PlanCheck, ...]:
     # for every pre-existing plan stay byte-identical.
     if getattr(plan, "incremental", False):
         checks = checks + (_check_incremental(plan),)
+    # Same pattern for the mesh layout: only sharded plans carry one.
+    if getattr(plan, "layout", None) is not None:
+        checks = checks + (_check_layout(plan),)
     return checks
 
 

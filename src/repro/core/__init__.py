@@ -11,9 +11,9 @@ from repro.core.binning import PAD_BIN, bin_indices, one_hot_bins
 from repro.core.scans import METHODS, apply_carry, cw_b, cw_sts, cw_tis, wf_tis
 
 _ENGINE_EXPORTS = {
-    "WorkloadSpec", "ExecutionPlan", "plan", "HistogramEngine",
-    "EngineResult", "RegionQuery", "SlidingWindowQuery", "LikelihoodQuery",
-    "MultiScaleQuery",
+    "WorkloadSpec", "ExecutionPlan", "MeshLayout", "plan",
+    "HistogramEngine", "EngineResult", "RegionQuery", "SlidingWindowQuery",
+    "LikelihoodQuery", "MultiScaleQuery",
 }
 _HSOURCE_EXPORTS = {"HSource", "DenseH", "BandedH", "ShardedH", "as_hsource"}
 

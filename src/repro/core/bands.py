@@ -200,6 +200,10 @@ def iter_banded_ih(
     spatially-sharded with the same carry chain.  ``prefetch >= 1`` keeps
     that many band image slices staged on device ahead of the one
     computing (the §4.4 overlap applied inside one large frame).
+    ``device`` is any staging placement (``Device`` or ``Sharding``);
+    when given, slices are staged even at ``prefetch=0`` — a
+    ``NamedSharding`` commits each slice to the layout a sharded
+    compute_fn's shard_map consumes.
 
     The loop itself is ``runtime.FrameRuntime`` with the (b, w)
     bottom-row carry threaded between dispatches; this function only
@@ -228,12 +232,16 @@ def iter_banded_ih(
         H_band = compute_fn(band_img, carry)
         return H_band, H_band[..., -1, :]
 
-    # Stage band slices only when prefetch is requested: device_put pins
-    # to ONE device, and a sharded compute_fn (iter_banded_sharded_ih)
-    # must receive uncommitted slices its shard_map can lay out itself.
+    # Band slices are staged whenever a placement is known or prefetch is
+    # requested.  ``device`` may be a single ``Device`` or a ``Sharding``:
+    # a sharded compute_fn (iter_banded_sharded_ih) passes the
+    # ``NamedSharding`` its shard_map expects, so slices arrive already
+    # committed to the mesh layout instead of bouncing through one device
+    # — the old "stage only when prefetch >= 1" carve-out is gone.
     runtime = FrameRuntime(
         step, depth=1, carry_in=carry_in, device=device,
-        stage_inputs=prefetch >= 1, stage_ahead=max(prefetch, 0),
+        stage_inputs=prefetch >= 1 or device is not None,
+        stage_ahead=max(prefetch, 0),
         block=False,
     )
     slices: Iterable = (image[..., r0:r1, :] for r0, r1 in plan.spans)

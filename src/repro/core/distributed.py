@@ -37,7 +37,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, PartitionSpec as P
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.binning import PAD_BIN, bin_indices
@@ -69,6 +70,49 @@ def exclusive_axis_scan(
             d *= 2
         return val
     raise ValueError(f"unknown impl {impl!r}")
+
+
+def band_input_sharding(
+    mesh: Mesh,
+    sharding: str,
+    *,
+    row_axis: str = "data",
+    bin_axis: str = "model",
+    lead: int = 0,
+) -> NamedSharding:
+    """The placement a band image slice should be staged with before it
+    enters the sharded band compute: replicated for bin sharding (every
+    device masks its own bin range out of the full band) and row strips
+    over ``row_axis`` for spatial sharding.  ``lead`` counts leading
+    frame axes — (n, h, w) stacks are bin-sharded only, so the lead axes
+    are never split.  Handing this to ``FrameRuntime``/``stage_stream``
+    as ``device=`` commits each slice to the exact layout the shard_map
+    consumes, which is what removed the old "sharded plans skip staging"
+    carve-out in ``bands.iter_banded_ih``."""
+    if sharding == "bin":
+        return NamedSharding(mesh, P())
+    return NamedSharding(mesh, P(*([None] * lead), row_axis, None))
+
+
+def replica_meshes(mesh: Mesh, replica_axis: str) -> list:
+    """Split a mesh into frame-parallel replica-group submeshes along
+    ``replica_axis`` — the serving half of the planner's 2-D layout
+    (replica groups x within-group sharding).  One entry per index on the
+    axis, each a ``Mesh`` over the remaining axes (the within-group shard
+    layout), or ``None`` when the group is a bare single device (a 1-D
+    mesh has no remaining axes; callers hand ``None`` groups a plain
+    single-device engine, which keeps the PR 9 incremental path alive).
+    A mesh without the axis is one group: ``[mesh]``."""
+    names = list(mesh.axis_names)
+    if replica_axis not in names:
+        return [mesh]
+    ax = names.index(replica_axis)
+    rest = tuple(names[:ax] + names[ax + 1:])
+    out = []
+    for i in range(mesh.shape[replica_axis]):
+        devs = np.take(np.asarray(mesh.devices), i, axis=ax)
+        out.append(Mesh(devs, rest) if rest else None)
+    return out
 
 
 def bin_sharded_ih(
@@ -181,6 +225,7 @@ def iter_banded_sharded_ih(
     backend: str = "jnp",
     value_range: int = 256,
     scan_impl: str = "allgather",
+    prefetch: int = 0,
 ):
     """Band streaming composed with the sharded computations: each band
     runs bin- or spatially-sharded across the mesh, and the same (b, w)
@@ -197,6 +242,13 @@ def iter_banded_sharded_ih(
     collectives for the band composition, it is one elementwise add).
     Assemble host-side (``np.asarray`` per band) when a materialized H is
     actually wanted; that doubles as the D2H spill.
+
+    Band slices are staged with the ``band_input_sharding`` placement
+    (replicated for bin sharding, row strips for spatial), so staging
+    overlaps the sharded compute exactly like the single-device path and
+    the between-band carry rides the shard layout end to end — no host
+    round-trip anywhere in the carry chain.  ``prefetch >= 1`` keeps that
+    many sharded slices staged ahead.
     """
     from repro.core import bands
 
@@ -235,8 +287,13 @@ def iter_banded_sharded_ih(
         # H_band's sharding, so no resharding or collective happens.
         return apply_carry(H_band, carry_in)
 
+    staging = band_input_sharding(
+        mesh, sharding, row_axis=row_axis, bin_axis=bin_axis,
+        lead=image.ndim - 2,
+    )
     return bands.iter_banded_ih(
-        image, num_bins, plan=plan, compute_fn=compute_fn
+        image, num_bins, plan=plan, compute_fn=compute_fn,
+        device=staging, prefetch=prefetch,
     )
 
 

@@ -153,6 +153,53 @@ class WorkloadSpec:
 # plan
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
+class MeshLayout:
+    """The planner's 2-D serving layout over a mesh (paper §4.6 run as a
+    serving system): frame-parallel **replica groups** along every mesh
+    axis the shard mapping does not consume, times bin/spatial sharding
+    within each group.  ``explain()`` renders it, plancheck validates it
+    (axes exist, disjoint, and the product covers the mesh), and
+    ``serve.DistributedAnalyticsService`` executes it — one
+    ``AnalyticsService`` per replica group over that group's submesh
+    (``distributed.replica_meshes``)."""
+
+    kind: str                        # "bin" | "spatial" (within-group)
+    shard_axis: str                  # mesh axis the shard mapping uses
+    shards_per_group: int            # devices per replica group
+    replica_axes: tuple              # frame-parallel axes (may be empty)
+    num_groups: int                  # product of the replica axes' sizes
+
+    def describe(self) -> str:
+        over = (" x ".join(repr(a) for a in self.replica_axes)
+                or "(no free axis)")
+        return (
+            f"{self.num_groups} replica group(s) over {over} x "
+            f"{self.kind} sharding over {self.shard_axis!r} "
+            f"({self.shards_per_group} device(s)/group)"
+        )
+
+
+def choose_layout(mesh, kind: str, *, bin_axis: str = "model",
+                  row_axis: str = "data") -> MeshLayout:
+    """Derive the replica x shard layout from the mesh shape: the shard
+    mapping consumes one axis (bins or row strips); every other axis is
+    frame-parallel replication — the flax-imagenet scaling idiom
+    (throughput = per-group rate x ``num_groups``) applied to frames
+    instead of batch elements."""
+    shape = dict(mesh.shape)
+    shard_axis = bin_axis if kind == "bin" else row_axis
+    replica_axes = tuple(a for a in mesh.axis_names if a != shard_axis)
+    num_groups = 1
+    for a in replica_axes:
+        num_groups *= shape[a]
+    return MeshLayout(
+        kind=kind, shard_axis=shard_axis,
+        shards_per_group=shape.get(shard_axis, 1),
+        replica_axes=replica_axes, num_groups=num_groups,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
 class ExecutionPlan:
     """The planner's resolved decisions — inspectable and testable.
 
@@ -174,6 +221,7 @@ class ExecutionPlan:
     microbatch_mode: str = "fixed"      # "fixed" | "adaptive"
     tuned: str | None = None            # autotune priors key, if applied
     incremental: bool = False           # update a cached predecessor H
+    layout: MeshLayout | None = None    # replica x shard serving layout
 
     def explain(self, verdict=None) -> str:
         """Human-readable plan rationale (golden-snapshot tested).
@@ -259,6 +307,10 @@ class ExecutionPlan:
                 f"  sharding        : {self.sharding} over mesh axis "
                 f"{axis!r} ({size} devices)"
             )
+            if self.layout is not None:
+                lines.append(
+                    f"  mesh layout     : {self.layout.describe()}"
+                )
         if verdict is not None:
             lines.append("  " + verdict.render().replace("\n", "\n  "))
         return "\n".join(lines)
@@ -441,6 +493,10 @@ def plan(spec: WorkloadSpec) -> ExecutionPlan:
             microbatch_mode=(
                 "adaptive" if spec.adaptive_microbatch else "fixed"),
             tuned=tuned,
+            layout=choose_layout(
+                spec.mesh, sharding,
+                bin_axis=spec.bin_axis, row_axis=spec.row_axis,
+            ),
         )
 
     if spec.memory_budget_bytes is not None:

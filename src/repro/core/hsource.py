@@ -34,6 +34,7 @@ tests/test_distributed.py.
 from __future__ import annotations
 
 import abc
+import functools
 import itertools
 import warnings
 
@@ -578,14 +579,80 @@ class FusedRowsH(HSource):
         )
 
 
+@functools.lru_cache(maxsize=64)
+def _rows_gather(mesh, kind, lead, bin_axis, row_axis, local_h):
+    """Jitted (H, row_ids) -> slab gather for ShardedH.rows().
+
+    Cached per (mesh, kind, geometry) with the row ids as a *dynamic*
+    argument: every cached frame holds its own ShardedH, and serving
+    traffic calls rows() once per request — rebuilding the shard_map
+    per call would retrace and recompile every time (~seconds per query
+    on a fake-device mesh), so the executable must outlive the source."""
+    import jax
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+
+    if kind == "bin":
+        fn = shard_map(
+            lambda h_local, rid: jnp.take(h_local, rid, axis=-2),
+            mesh=mesh,
+            in_specs=(P(*([None] * lead), bin_axis, None, None), P(None)),
+            out_specs=P(*([None] * lead), bin_axis, None, None),
+            check_vma=False,
+        )
+        return jax.jit(fn)
+
+    def shard_fn(h_local, rid):
+        lo = lax.axis_index(row_axis) * local_h
+        local = rid - lo
+        own = (local >= 0) & (local < local_h)
+        slab = jnp.take(
+            h_local, jnp.clip(local, 0, local_h - 1), axis=-2
+        )
+        slab = jnp.where(own[:, None], slab, jnp.zeros((), slab.dtype))
+        return lax.psum(slab, row_axis)
+
+    fn = shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(P(*([None] * lead), None, row_axis, None), P(None)),
+        out_specs=P(*([None] * lead), None, None, None),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=64)
+def _region_sharded(mesh, h_lead, rects_ndim, bin_axis):
+    """Jitted (H, rects) -> per-bin-shard region histograms (bin kind)."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+
+    fn = shard_map(
+        lambda h_local, r: rq.region_histogram(h_local, r),
+        mesh=mesh,
+        in_specs=(
+            P(*([None] * h_lead), bin_axis, None, None), P(),
+        ),
+        out_specs=P(*([None] * (h_lead + rects_ndim - 1)), bin_axis),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
 class ShardedH(HSource):
     """A mesh-sharded dense H (core/distributed.py).
 
     ``kind="bin"`` (the paper's multi-GPU scheme) keeps region queries
-    device-side and embarrassingly parallel via shard_map; ``"spatial"``
-    (row-sharded) assembles host-side — row indexing across shards is
-    exactly the jax-0.4.37 hazard, so ``rows()`` round-trips through
-    ``np.asarray`` of the whole H."""
+    device-side and embarrassingly parallel via shard_map.  ``rows()``
+    gathers corner rows device-side for both kinds: bin shards index
+    their (unsharded) row axis locally, row shards mask-select the rows
+    they own and a ``psum`` assembles the slab — so the only readback is
+    the (.., b, k, w) slab itself, never the whole H.  A device-side
+    ``concatenate`` over shards would be the jax-0.4.37 hazard; the
+    gather uses take/where/psum only."""
 
     def __init__(self, H, mesh, *, kind: str = "bin",
                  bin_axis: str = "model", row_axis: str = "data"):
@@ -613,12 +680,40 @@ class ShardedH(HSource):
     def lead(self) -> tuple:
         return tuple(self.H.shape[:-3])
 
+    @property
+    def nbytes(self) -> int:
+        # The actual aggregate array footprint, like DenseH — the HSource
+        # default re-derives a 4-byte-per-element planner estimate, which
+        # mis-counts a sharded H the moment its dtype is not fp32.  The
+        # service's byte-aware cache eviction (cache_bytes=) charges
+        # sources by this number, so it must track the real storage.
+        return int(np.prod(self.H.shape, dtype=np.int64)) * self.H.dtype.itemsize
+
     def rows(self, row_ids) -> np.ndarray:
-        # Host-side assembly for both kinds: np.asarray crosses the shards
-        # correctly on every supported jax, whereas device-side row
-        # gathers/concatenates over a row-sharded H are the jax-0.4.37
-        # hazard (CHANGES.md, PR 3).
-        return np.asarray(self.H)[..., np.asarray(row_ids), :]
+        row_ids = np.asarray(row_ids)
+        if row_ids.size == 0:
+            return np.asarray(self.H)[..., row_ids, :]
+        if self.kind == "spatial" and self.height % self.mesh.shape[self.row_axis]:
+            # Uneven row shards cannot compute local offsets statically;
+            # fall back to the whole-H host pull (engine plans never
+            # produce this — plan validation requires divisibility).
+            return np.asarray(self.H)[..., row_ids, :]
+        return self._rows_device(row_ids)
+
+    def _rows_device(self, row_ids: np.ndarray) -> np.ndarray:
+        """Device-side corner-row gather: select the k requested rows on
+        the mesh and read back only the (.., b, k, w) slab — the
+        sanctioned query-side sync, not the carry path.  No cross-shard
+        concat happens: bin shards take rows locally (the row axis is
+        unsharded within each shard), and row shards zero the rows they
+        do not own and psum over the row axis."""
+        lead = self.H.ndim - 3
+        rid = jnp.asarray(row_ids, jnp.int32)
+        local_h = (0 if self.kind == "bin"
+                   else self.height // self.mesh.shape[self.row_axis])
+        fn = _rows_gather(self.mesh, self.kind, lead,
+                          self.bin_axis, self.row_axis, local_h)
+        return np.asarray(fn(self.H, rid))
 
     def dense(self):
         return jnp.asarray(np.asarray(self.H))
@@ -626,20 +721,12 @@ class ShardedH(HSource):
     def region_histogram(self, rects) -> jnp.ndarray:
         if self.kind != "bin":
             return super().region_histogram(rects)
-        from repro.compat import shard_map
-        from jax.sharding import PartitionSpec as P
-
         rects = jnp.asarray(rects)
         h_lead = self.H.ndim - 3
-        return shard_map(
-            lambda h_local, r: rq.region_histogram(h_local, r),
-            mesh=self.mesh,
-            in_specs=(
-                P(*([None] * h_lead), self.bin_axis, None, None), P(),
-            ),
-            out_specs=P(*([None] * (h_lead + rects.ndim - 1)), self.bin_axis),
-            check_vma=False,
-        )(self.H, rects)
+        # Same executable-reuse story as _rows_gather: one cached jitted
+        # shard_map per (mesh, geometry), rects as a dynamic argument.
+        fn = _region_sharded(self.mesh, h_lead, rects.ndim, self.bin_axis)
+        return fn(self.H, rects)
 
 
 def as_hsource(H) -> HSource:

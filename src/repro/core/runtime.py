@@ -87,8 +87,14 @@ def stage_stream(items: Iterable, size: int = 2, device=None) -> Iterator:
     """Stage host arrays onto the device ahead of consumption (async H2D
     ~ cudaMemcpyAsync).  Exactly ``size`` items are staged before the
     first yield and at most ``size`` are ever resident beyond the one in
-    the consumer's hands."""
-    device = device or jax.devices()[0]
+    the consumer's hands.
+
+    ``device`` is any ``jax.device_put`` placement: a single ``Device``
+    (default: the first device) or a ``jax.sharding.Sharding`` — a
+    ``NamedSharding`` lays each staged item out across its mesh, which is
+    how the sharded band streams commit their slices to the layout their
+    shard_map expects instead of bouncing through one device."""
+    device = device if device is not None else jax.devices()[0]
     queue: collections.deque = collections.deque()
     for item in items:
         queue.append(jax.device_put(item, device))
@@ -218,6 +224,10 @@ class FrameRuntime:
       adaptive: retune the microbatch from measured completion latency.
       carry_in: initial carry (``None`` for stateless pipelines); the
         final carry lands in ``self.last_carry`` when the run drains.
+      device: staging placement — a ``Device`` (default: first device)
+        or a ``jax.sharding.Sharding``.  A ``NamedSharding`` commits
+        each chunk to the mesh layout a shard_map'd ``step`` consumes,
+        so sharded plans stage exactly like single-device ones.
       stage_inputs: ``jax.device_put`` each chunk before ``step``.
       stage_ahead: chunks staged beyond the dispatch window (device
         prefetch; 0 = stage just-in-time, which is still async H2D).
@@ -261,7 +271,7 @@ class FrameRuntime:
             if adaptive else None
         )
         self.carry_in = carry_in
-        self.device = device or jax.devices()[0]
+        self.device = device if device is not None else jax.devices()[0]
         self.stage_inputs = stage_inputs
         self.stage_ahead = stage_ahead
         self.block = block

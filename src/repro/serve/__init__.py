@@ -1,10 +1,26 @@
 """Serving front-end over the plan/execute engine (ROADMAP north star:
-heavy concurrent query traffic against the integral-histogram engine)."""
+heavy concurrent query traffic against the integral-histogram engine).
 
+``AnalyticsService`` is the single-engine core; the mesh-scale layer
+(``DistributedAnalyticsService``, serve/distributed.py) runs one of it
+per replica group of the planner's ``MeshLayout``."""
+
+from repro.serve.distributed import (
+    DistributedAnalyticsService,
+    HashRing,
+    sharded_engine_factory,
+)
 from repro.serve.service import (
     AnalyticsService,
     ServiceOverloaded,
     ServiceStats,
 )
 
-__all__ = ["AnalyticsService", "ServiceOverloaded", "ServiceStats"]
+__all__ = [
+    "AnalyticsService",
+    "DistributedAnalyticsService",
+    "HashRing",
+    "ServiceOverloaded",
+    "ServiceStats",
+    "sharded_engine_factory",
+]

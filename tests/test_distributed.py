@@ -253,3 +253,118 @@ def test_production_mesh_shapes():
         print("mesh OK")
     """)
     assert "mesh OK" in out
+
+
+def test_distributed_service_parity_8dev():
+    """ISSUE 10 satellite: end-to-end mesh-serving parity on 8 fake
+    devices.  A DistributedAnalyticsService answers a mixed trace —
+    including a PR 9 low-motion video chain — bit-exact vs a
+    single-device AnalyticsService fed the same trace, in BOTH layouts:
+    8 replica groups x 1 device (chain pinned to one replica, updates
+    local) and 2 replica groups x 4-way bin sharding.  Also pins the
+    mesh-native plumbing underneath: explain() renders the replica x
+    shard layout, sharded band slices stage with a NamedSharding and the
+    between-band carry stays a device array, and ShardedH gathers corner
+    rows device-side."""
+    out = _run("""
+        import warnings; warnings.filterwarnings("ignore")
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding
+        from repro.core.engine import (HistogramEngine, RegionQuery,
+                                       SlidingWindowQuery)
+        from repro.serve import (AnalyticsService,
+                                 DistributedAnalyticsService,
+                                 sharded_engine_factory)
+
+        rng = np.random.default_rng(11)
+        h, w, bins = 64, 96, 16
+        frames = [rng.integers(0, 256, (h, w), dtype=np.uint8)]
+        for _ in range(4):                      # low-motion chain 0..4
+            nxt = frames[-1].copy()
+            r = int(rng.integers(0, h - 3))
+            nxt[r:r + 3] = rng.integers(0, 256, (3, w), dtype=np.uint8)
+            frames.append(nxt)
+        for _ in range(3):                      # independent frames 5..7
+            frames.append(rng.integers(0, 256, (h, w), dtype=np.uint8))
+        store = {i: f for i, f in enumerate(frames)}
+        # 20 corner rows > h/4: keeps plans dense (H stored) so the
+        # video chain can actually update
+        rects = np.array([[3 * i, 2, 3 * i + 1, 10] for i in range(10)])
+        trace = [(i, RegionQuery(rects)) for i in range(5)]
+        trace += [(i, RegionQuery(rects)) for i in (5, 6, 7, 2, 5)]
+        trace.append((3, SlidingWindowQuery((16, 24), 8)))
+
+        single = AnalyticsService(HistogramEngine(bins, backend="jnp"),
+                                  store)
+        want = single.process(list(trace))
+
+        # layout 1: 8 replica groups x 1 device — chain-pinned updates
+        mesh_r = jax.make_mesh((8,), ("data",))
+        dist_r = DistributedAnalyticsService(
+            sharded_engine_factory(bins, backend="jnp"), store,
+            mesh=mesh_r, replica_axis="data")
+        got_r = dist_r.process(list(trace))
+        for g, wv in zip(got_r, want):
+            assert np.array_equal(np.asarray(g), np.asarray(wv))
+        assert len({dist_r.replica_for(i) for i in range(5)}) == 1
+        snap = dist_r.snapshot()
+        assert snap["num_replicas"] == 8
+        per_updated = [p["updated"] for p in snap["replicas"]]
+        assert sum(per_updated) == 4            # frames 1..4 updated...
+        assert sum(1 for u in per_updated if u) == 1   # ...on ONE replica
+        print("replica-parallel parity OK", per_updated)
+
+        # layout 2: 2 replica groups x 4-way bin shard
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        dist_s = DistributedAnalyticsService(
+            sharded_engine_factory(bins, backend="jnp"), store,
+            mesh=mesh, replica_axis="data")
+        got_s = dist_s.process(list(trace))
+        for g, wv in zip(got_s, want):
+            assert np.array_equal(np.asarray(g), np.asarray(wv))
+        sub = dist_s.replicas[0]._engine.mesh
+        assert dict(sub.shape) == {"model": 4}
+        print("sharded-replica parity OK")
+
+        # the planner's layout, rendered at mesh scale
+        eng = HistogramEngine(bins, backend="jnp", mesh=mesh)
+        out = eng.run(frames[5], [RegionQuery(rects)])
+        text = eng.last_plan.explain()
+        assert ("mesh layout     : 2 replica group(s) over 'data' x bin "
+                "sharding over 'model' (4 device(s)/group)") in text
+
+        # sharded carry rides the shard layout: band slices stage with a
+        # NamedSharding and the between-band carry is a committed device
+        # array, never a host round-trip
+        from repro.core.distributed import iter_banded_sharded_ih
+        from repro.kernels.ops import integral_histogram
+        img = frames[5]
+        ref = np.asarray(integral_histogram(jnp.asarray(img), bins,
+                                            backend="jnp"))
+        bands = list(iter_banded_sharded_ih(img, bins, mesh,
+                                            sharding="spatial", band_h=16,
+                                            prefetch=1))
+        for b in bands:
+            assert isinstance(b.carry.sharding, NamedSharding)
+            assert isinstance(b.H.sharding, NamedSharding)
+        got_b = np.concatenate([np.asarray(b.H) for b in bands], axis=-2)
+        assert np.array_equal(got_b, ref)
+
+        # ShardedH device-side corner-row gather, both kinds
+        from repro.core.distributed import (bin_sharded_ih,
+                                            spatial_sharded_ih)
+        from repro.core.hsource import ShardedH
+        rid = np.array([0, 15, 16, 63])
+        for kind, H in (("bin", bin_sharded_ih(jnp.asarray(img), bins,
+                                               mesh)),
+                        ("spatial", spatial_sharded_ih(jnp.asarray(img),
+                                                       bins, mesh))):
+            src = ShardedH(H, mesh, kind=kind)
+            rows = src.rows(rid)
+            assert type(rows) is np.ndarray
+            assert np.array_equal(rows, ref[:, rid, :]), kind
+        print("mesh-serving OK")
+    """)
+    assert "replica-parallel parity OK" in out
+    assert "sharded-replica parity OK" in out
+    assert "mesh-serving OK" in out

@@ -506,3 +506,50 @@ def test_tracker_rides_the_engine(rng):
             np.asarray(st_l["bbox"]), np.asarray(st_r["bbox"]))
     with pytest.raises(ValueError, match="num_bins"):
         FragmentTracker(cfg, engine=HistogramEngine(4, backend="jnp"))
+
+
+# ---------------------------------------------------------------------------
+# mesh layout (replica x shard serving layout)
+# ---------------------------------------------------------------------------
+def test_plan_mesh_layout_rendered_and_validated(rng):
+    """Sharded plans carry the 2-D replica x shard MeshLayout: explain()
+    renders it, plancheck validates it, non-mesh plans never grow one
+    (the golden snapshots above pin the absence)."""
+    import dataclasses
+
+    from repro.analysis import plancheck
+    from repro.core.engine import MeshLayout, choose_layout
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    p = plan(WorkloadSpec(height=24, width=16, num_bins=8, num_frames=1,
+                          backend="jnp", mesh=mesh))
+    assert p.sharding == "bin"
+    lay = p.layout
+    assert isinstance(lay, MeshLayout)
+    assert lay.kind == "bin" and lay.shard_axis == "model"
+    assert lay.replica_axes == ("data",)
+    assert lay.num_groups * lay.shards_per_group == 1
+    text = p.explain()
+    assert "mesh layout     : " in text
+    assert "replica group(s) over 'data'" in text
+    assert "bin sharding over 'model'" in text
+    verdict = plancheck.check_plan(p)
+    assert verdict.ok
+    assert any(c.name == "mesh-layout" and c.status == "ok"
+               for c in verdict.checks)
+    # spatial flips the axes: 'data' shards rows, 'model' replicates
+    sp = plan(WorkloadSpec(height=24, width=16, num_bins=7, num_frames=1,
+                           backend="jnp", mesh=mesh, sharding="spatial"))
+    assert sp.sharding == "spatial"
+    assert sp.layout.shard_axis == "data"
+    assert sp.layout.replica_axes == ("model",)
+    # non-mesh plans carry no layout
+    assert plan(WorkloadSpec(height=24, width=16, num_bins=8,
+                             backend="jnp")).layout is None
+    # a corrupted layout fails the check loudly
+    bad = dataclasses.replace(
+        p, layout=choose_layout(mesh, "bin", bin_axis="nope"))
+    v_bad = plancheck.check_plan(bad)
+    assert not v_bad.ok
+    assert any(c.name == "mesh-layout" and c.status == "fail"
+               for c in v_bad.checks)

@@ -316,3 +316,58 @@ def test_banded_shims_name_a_removal_version(rng):
     bands = iter_banded_ih(img, 4, band_h=8, backend="jnp")
     with pytest.warns(DeprecationWarning, match=r"removed in 2\.0"):
         banded_region_histogram(bands, np.array([1, 1, 8, 8]))
+
+
+# ---------------------------------------------------------------------------
+# Sharding-aware staging (mesh-scale serving)
+# ---------------------------------------------------------------------------
+def test_stage_stream_accepts_a_sharding():
+    """`device=` takes any jax.device_put placement — a NamedSharding
+    commits each staged item to the mesh layout instead of one device
+    (what removed the sharded-plan staging carve-out in bands)."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.runtime import stage_stream
+
+    mesh = jax.make_mesh((1,), ("data",))
+    ns = NamedSharding(mesh, P())
+    items = [np.full((4, 4), i, np.float32) for i in range(3)]
+    staged = list(stage_stream(iter(items), size=2, device=ns))
+    assert len(staged) == 3
+    for i, x in enumerate(staged):
+        assert x.sharding == ns
+        np.testing.assert_array_equal(np.asarray(x), items[i])
+
+
+def test_frame_runtime_stages_with_a_sharding(rng):
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), ("data",))
+    ns = NamedSharding(mesh, P())
+    seen = []
+
+    def step(chunk, carry):
+        seen.append(chunk.sharding)
+        return chunk * 2, carry
+
+    rt = FrameRuntime(step, depth=1, device=ns, stage_inputs=True)
+    items = [np.full((2,), i, np.float32) for i in range(4)]
+    outs = [d.out for d in rt.run(items, batched=False)]
+    assert all(s == ns for s in seen)
+    for i, o in enumerate(outs):
+        np.testing.assert_array_equal(np.asarray(o), [2 * i, 2 * i])
+
+
+def test_iter_banded_ih_stages_when_device_given(rng):
+    """An explicit device placement turns staging on even at prefetch=0
+    (the old carve-out skipped staging for sharded plans entirely)."""
+    import jax
+
+    img = rng.integers(0, 256, (24, 16), dtype=np.uint8)
+    dev = jax.devices()[0]
+    bands = list(iter_banded_ih(img, 8, band_h=8, backend="jnp", device=dev))
+    full = np.concatenate([np.asarray(b.H) for b in bands], axis=-2)
+    ref = np.asarray(integral_histogram(jnp.asarray(img), 8, backend="jnp"))
+    np.testing.assert_array_equal(full, ref)

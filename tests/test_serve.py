@@ -290,3 +290,114 @@ def test_snapshot_counts_hits_beside_update_split(rng):
     snap = svc.stats.snapshot()
     assert snap["hit"] == 1 == snap["cache_hits"]
     assert snap["recomputed"] == 1 and snap["updated"] == 1
+
+
+# ---------------------------------------------------------------------------
+# DistributedAnalyticsService (mesh-scale serving; 8-device runs live in
+# test_distributed.py's subprocess tests)
+# ---------------------------------------------------------------------------
+def _dist_factory():
+    from repro.serve import sharded_engine_factory
+
+    return sharded_engine_factory(8, backend="jnp")
+
+
+def test_distributed_service_parity_and_chain_pinning(rng):
+    """Routed traffic is bit-exact vs a single service on the same trace,
+    and a PR 9 video chain routes to ONE replica so every incremental
+    update stays local."""
+    from repro.serve import DistributedAnalyticsService
+
+    store = _video_store(rng)
+    trace = [(i, RegionQuery(DENSE_RECTS)) for i in range(5)]
+    trace += [(2, RegionQuery(DENSE_RECTS)), (4, SlidingWindowQuery((8, 8), 4))]
+    dist = DistributedAnalyticsService(_dist_factory(), store, num_replicas=3)
+    single = AnalyticsService(HistogramEngine(8, backend="jnp"), store)
+    got = dist.process(list(trace))
+    want = single.process(list(trace))
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    routes = [dist.replica_for(i) for i in range(5)]
+    assert len(set(routes)) == 1
+    snap = dist.snapshot()
+    assert snap["requests"] == len(trace)
+    assert snap["num_replicas"] == 3 and len(snap["replicas"]) == 3
+    # the whole chain updated on one replica; the others ran nothing
+    per_updated = [p["updated"] for p in snap["replicas"]]
+    assert sum(per_updated) == 4
+    assert sum(1 for u in per_updated if u) == 1
+
+
+def test_distributed_routing_is_deterministic_across_instances(rng):
+    """Consistent hashing: two independently built services route every
+    ref identically (no salted/process-local hashing)."""
+    from repro.serve import DistributedAnalyticsService
+
+    store = _video_store(rng)
+    kw = dict(num_replicas=4, predecessor=lambda r: None)
+    a = DistributedAnalyticsService(_dist_factory(), store, **kw)
+    b = DistributedAnalyticsService(_dist_factory(), store, **kw)
+    refs = list(range(32)) + ["cam0/17", "cam1/17"]
+    assert [a.replica_for(r) for r in refs] == [b.replica_for(r) for r in refs]
+    # and the ring spreads refs over more than one replica
+    assert len({a.replica_for(r) for r in refs}) > 1
+
+
+def test_distributed_aggregate_backpressure(rng):
+    """max_pending bounds TOTAL outstanding submits across replicas."""
+    from repro.serve import DistributedAnalyticsService, ServiceOverloaded
+
+    gate = threading.Event()
+    frame = rng.integers(0, 256, (32, 24), dtype=np.uint8)
+
+    def resolve(ref):
+        gate.wait(timeout=10)
+        return frame
+
+    svc = DistributedAnalyticsService(
+        _dist_factory(), resolve, num_replicas=2, max_pending=3,
+        predecessor=lambda r: None)
+    q = RegionQuery(RECTS)
+    with svc:
+        futs = [svc.submit(i, q) for i in range(3)]
+        with pytest.raises(ServiceOverloaded):
+            svc.submit(99, q)
+        gate.set()
+        outs = [f.result(timeout=30) for f in futs]
+    assert all(o is not None for o in outs)
+    snap = svc.snapshot()
+    assert snap["rejected"] == 1 and snap["completed"] == 3
+    # the in-flight window drained back to zero after the futures resolved
+    assert svc._inflight == 0
+
+
+def test_distributed_aggregate_cache_bytes_split(rng):
+    """The aggregate byte budget splits across replicas, so the total
+    cache residency stays bounded no matter how traffic skews."""
+    from repro.serve import DistributedAnalyticsService
+
+    store = _video_store(rng)
+    one = 4 * 8 * 32 * 24               # dense H bytes per frame
+    svc = DistributedAnalyticsService(
+        _dist_factory(), store, num_replicas=2, cache_bytes=2 * one,
+        predecessor=lambda r: None)
+    svc.process([(i, RegionQuery(DENSE_RECTS)) for i in range(5)])
+    assert all(r.cache_bytes == one for r in svc.replicas)
+    cached = sum(len(c) for c in svc.cached_frames)
+    assert cached <= 2                  # one H per replica fits the split
+
+
+def test_sharded_h_nbytes_tracks_storage_dtype():
+    """Satellite: ShardedH.nbytes reports the real array footprint (the
+    inherited planner estimate assumed 4-byte elements, so byte-aware
+    cache eviction mis-charged sharded sources)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.hsource import ShardedH
+
+    mesh = jax.make_mesh((1,), ("model",))
+    f32 = ShardedH(jnp.zeros((8, 16, 12), jnp.float32), mesh, kind="bin")
+    assert f32.nbytes == 8 * 16 * 12 * 4
+    u16 = ShardedH(jnp.zeros((8, 16, 12), jnp.uint16), mesh, kind="bin")
+    assert u16.nbytes == 8 * 16 * 12 * 2
